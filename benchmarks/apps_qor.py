@@ -1,0 +1,30 @@
+"""Paper Figs. 8-10 — end-to-end QoR of the three applications under
+accurate / RAPID / Mitchell / truncated arithmetic."""
+from __future__ import annotations
+
+from repro.apps import harris, jpeg, pan_tompkins
+
+PAPER = {
+    "jpeg_psnr": {"accurate": 30.9, "rapid": 28.7, "truncated": 24.4},
+    "harris_vectors": {"accurate": 100.0, "rapid": 94.0, "truncated": 83.0},
+}
+
+
+def main():
+    print("app,variant,metric,value,paper_value")
+    jr = jpeg.run(n_images=2, size=192)
+    for k, v in jr.items():
+        print(f"jpeg,{k},psnr_db,{v:.2f},{PAPER['jpeg_psnr'].get(k, '')}")
+    pr = pan_tompkins.run(n_beats=30)
+    for k, v in pr.items():
+        print(f"pan_tompkins,{k},sensitivity,{v['sensitivity']:.3f},~1.0")
+        print(f"pan_tompkins,{k},psnr_db,{v['psnr_vs_accurate_db']},>=28")
+    hr = harris.run(n_images=2, size=160)
+    for k, v in hr.items():
+        print(f"harris,{k},correct_vectors_pct,{v},"
+              f"{PAPER['harris_vectors'].get(k, '')}")
+    return {"jpeg": jr, "pan_tompkins": pr, "harris": hr}
+
+
+if __name__ == "__main__":
+    main()

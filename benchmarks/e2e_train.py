@@ -1,0 +1,53 @@
+"""End-to-end trainability: loss curves exact vs RAPID arithmetic on a
+reduced model (the framework-level claim that near-unbiased approximate
+arithmetic trains — paper SSV-B error-bias discussion + SSVI outlook)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RAPID, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model
+from repro.train.optimizer import OptConfig
+from repro.train.trainstep import make_train_step
+
+
+def run(steps: int = 40, seed: int = 0):
+    ctx = ParallelCtx()
+    out = {}
+    for mode in ("exact", "rapid"):
+        cfg = get_config("yi_6b").reduced().with_(
+            n_layers=2, d_model=64, d_ff=128, head_dim=16)
+        if mode == "rapid":
+            cfg = cfg.with_(approx=RAPID)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(seed))
+        init_opt, step = make_train_step(
+            m, OptConfig(lr=3e-3, warmup_steps=5, total_steps=steps), ctx)
+        opt = init_opt(params)
+        src = SyntheticLM(cfg.vocab_size, 32, 8, seed)
+        sfun = jax.jit(step, donate_argnums=(0, 1))
+        losses = []
+        for i in range(steps):
+            params, opt, mt = sfun(params, opt, src.batch_at(i), jnp.int32(i))
+            losses.append(float(mt["loss"]))
+        out[mode] = losses
+    return out
+
+
+def main():
+    res = run()
+    print("step,loss_exact,loss_rapid")
+    for i, (a, b) in enumerate(zip(res["exact"], res["rapid"])):
+        if i % 5 == 0 or i == len(res["exact"]) - 1:
+            print(f"{i},{a:.4f},{b:.4f}")
+    gap = abs(res["exact"][-1] - res["rapid"][-1])
+    print(f"# final-loss gap: {gap:.4f} (near-unbiased arithmetic trains)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""SSRoofline — aggregate the dry-run JSONs into the per-(arch x shape)
+roofline table: three terms, dominant bottleneck, MODEL_FLOPS ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "pod1", approx: bool = False):
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}{'__rapid' if approx else ''}.json")):
+        if approx != f.stem.endswith("__rapid"):
+            continue
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def main(mesh: str = "pod1"):
+    rows = load(mesh)
+    print("arch,shape,dominant,compute_s,memory_s,collective_s,"
+          "mem_GiB,useful_flops_ratio,coll_GB,status")
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},-,-,-,-,-,-,-,SKIP")
+            continue
+        if "error" in r:
+            print(f"{r['arch']},{r['shape']},-,-,-,-,-,-,-,FAIL")
+            continue
+        t = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{t['dominant']},"
+              f"{t['compute_s']:.3e},{t['memory_s']:.3e},"
+              f"{t['collective_s']:.3e},"
+              f"{r['memory']['per_device_total']/2**30:.2f},"
+              f"{(r.get('useful_flops_ratio') or 0):.3f},"
+              f"{r['hlo_analysis']['collectives_per_dev']['total']/1e9:.2f},OK")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "pod1")

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  table3_accuracy    Table III accuracy columns (ARE/PRE/bias, all widths)
+  table3_throughput  Table III throughput columns (CPU proxy + op costs)
+  apps_qor           Figs. 8-10 end-to-end application QoR
+  e2e_train          trainability of RAPID arithmetic (loss curves)
+  roofline_report    SSRoofline table from the dry-run artifacts
+
+``python -m benchmarks.run [name ...]`` — no args runs everything.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+ALL = ["table3_accuracy", "table3_throughput", "apps_qor", "e2e_train",
+       "roofline_report"]
+
+
+def main(names=None) -> int:
+    names = names or ALL
+    failures = []
+    for name in names:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+        except Exception as e:  # keep the harness going
+            failures.append(name)
+            print(f"===== {name} FAILED: {type(e).__name__}: {e} =====")
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:] or None))

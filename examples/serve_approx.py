@@ -1,0 +1,41 @@
+"""Serve a small model with batched requests, comparing exact vs RAPID
+decode outputs (token agreement + throughput).
+
+Run: PYTHONPATH=src python examples/serve_approx.py
+"""
+import time
+
+import jax
+
+from repro.configs.base import RAPID, get_config
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    base = get_config("minicpm_2b").reduced().with_(dtype="float32")
+    prompts = [[1 + (7 * i + j) % 300 for j in range(6 + i % 3)]
+               for i in range(8)]
+    outs = {}
+    for mode in ("exact", "rapid"):
+        cfg = base if mode == "exact" else base.with_(approx=RAPID)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, ParallelCtx(), cache_n=64)
+        t0 = time.time()
+        outs[mode] = eng.generate(prompts, max_new=12)
+        dt = time.time() - t0
+        n = sum(len(o) for o in outs[mode])
+        print(f"{mode:6s}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    agree = sum(
+        a == b for oa, ob in zip(outs["exact"], outs["rapid"])
+        for a, b in zip(oa, ob))
+    total = sum(len(o) for o in outs["exact"])
+    print(f"token agreement exact-vs-rapid: {agree}/{total} "
+          f"({100*agree/total:.0f}%) — untrained weights amplify "
+          "arithmetic differences; trained models agree far more")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Shared arithmetic dispatch for the three end-to-end applications.
+
+Each app runs under a named ``Variant`` that fixes which multiplier /
+divider implementation every kernel uses — accurate, RAPID, plain
+Mitchell, or the truncated DRUM/AAXD baselines — mirroring the paper's
+end-to-end comparison matrix (SSV-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+from repro.core.truncated import aaxd_div_f32, drum_mul_f32
+
+__all__ = ["Variant", "VARIANTS"]
+
+
+@dataclass(frozen=True)
+class Variant:
+    name: str
+    mul_kind: str  # exact | scheme name | drum
+    div_kind: str  # exact | scheme name | aaxd
+
+    def mul(self, a, b):
+        if self.mul_kind == "exact":
+            return a * b
+        if self.mul_kind == "drum":
+            return drum_mul_f32(a, b)
+        return fa.approx_mul(a, b, self.mul_kind)
+
+    def div(self, a, b):
+        if self.div_kind == "exact":
+            return a / b
+        if self.div_kind == "aaxd":
+            return aaxd_div_f32(a, b)
+        return fa.approx_div(a, b, self.div_kind)
+
+    def matmul(self, x, w):
+        """Contraction built from the variant's scalar multiplier.
+
+        x: [..., K]; w: [K, N] -> [..., N].
+        """
+        if self.mul_kind == "exact":
+            return x @ w
+        prod = self.mul(x[..., :, None], w)  # [..., K, N]
+        return prod.sum(axis=-2)
+
+
+VARIANTS = {
+    "accurate": Variant("accurate", "exact", "exact"),
+    "rapid": Variant("rapid", "rapid10", "rapid9"),
+    "rapid5": Variant("rapid5", "rapid5", "rapid5"),
+    "mitchell": Variant("mitchell", "mitchell", "mitchell"),
+    "truncated": Variant("truncated", "drum", "aaxd"),
+}
+
+
+def psnr(ref: jnp.ndarray, test: jnp.ndarray, peak: float) -> float:
+    mse = float(jnp.mean(jnp.square(ref.astype(jnp.float32)
+                                    - test.astype(jnp.float32))))
+    if mse == 0:
+        return float("inf")
+    return float(10.0 * jnp.log10(peak * peak / mse))

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, mesh-agnostic, keep-N.
+
+Design for 1000+ node operation:
+
+  * **Atomicity** — writes go to ``step_XXXX.tmp/`` and are renamed into
+    place only after every array and the manifest have been flushed, so a
+    preemption mid-write can never corrupt the latest checkpoint;
+  * **Mesh-agnostic restore** — arrays are stored as full logical arrays
+    (gathered per leaf); restore re-shards onto *whatever* mesh/sharding
+    the restarted job uses.  A job can restart on a different pod count
+    (elastic re-scale) as long as the new sharding divides the shapes;
+  * **Data-pipeline state** — the manifest carries (step, data cursor,
+    rng), so resume is bit-deterministic;
+  * **Keep-N GC** — old checkpoints are pruned only after a newer one is
+    durable.
+
+On a real multi-host cluster each host would write only its owned shards
+(process-local slices); on this single-process reference implementation
+the gather is a no-op.  The on-disk format (one ``.npy`` per leaf + JSON
+manifest) is intentionally dependency-free.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_SEP = "."
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -------------------------------------------------------------- save
+    def save(self, step: int, params, opt_state, extra: Optional[dict] = None):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        manifest: dict[str, Any] = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra or {},
+            "arrays": {},
+        }
+        for tree, prefix in ((params, "params"), (opt_state, "opt")):
+            for key, leaf in _flatten(tree).items():
+                arr = np.asarray(jax.device_get(leaf))
+                name = f"{prefix}{_SEP}{key}"
+                np.save(tmp / (name + ".npy"), arr)
+                manifest["arrays"][name] = {
+                    "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------------------------------------------------- restore
+    def all_steps(self):
+        return [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int], params_like, opt_like,
+                shardings=None, opt_shardings=None):
+        """Restore into the given pytree structures; reshard if asked.
+
+        ``params_like``/``opt_like`` provide structure; ``shardings``
+        trees (optional) re-place every leaf on the current mesh.
+        """
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        cdir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((cdir / "manifest.json").read_text())
+
+        def load(tree, prefix, shard_tree):
+            flat_keys = list(_flatten(tree).keys())
+            leaves, treedef = jax.tree_util.tree_flatten(tree)
+            shard_leaves = (jax.tree_util.tree_flatten(shard_tree)[0]
+                            if shard_tree is not None else [None] * len(leaves))
+            out = []
+            for key, like, shd in zip(flat_keys, leaves, shard_leaves):
+                arr = np.load(cdir / f"{prefix}{_SEP}{key}.npy")
+                if shd is not None:
+                    out.append(jax.device_put(arr, shd))
+                else:
+                    out.append(jax.numpy.asarray(arr))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        params = load(params_like, "params", shardings)
+        opt = load(opt_like, "opt", opt_shardings)
+        return step, params, opt, manifest.get("extra", {})

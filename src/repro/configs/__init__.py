@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, SHAPES, ApproxConfig, ModelConfig, get_config, EXACT, RAPID,
+)

@@ -1,0 +1,159 @@
+"""Config system: model / approximation / parallelism / run configs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(name)`` resolves them.  ``ApproxConfig``
+makes the paper's technique a first-class switch on any architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+ARCH_IDS = (
+    "h2o_danube_1_8b",
+    "yi_6b",
+    "minicpm_2b",
+    "starcoder2_7b",
+    "whisper_medium",
+    "xlstm_350m",
+    "jamba_1_5_large_398b",
+    "qwen3_moe_235b_a22b",
+    "llama4_scout_17b_a16e",
+    "llava_next_34b",
+)
+
+# canonical input-shape set for the LM family (assignment brief)
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclass(frozen=True)
+class ApproxConfig:
+    """Where and how the RAPID units replace exact arithmetic."""
+
+    mul_scheme: Optional[str] = None   # None/"exact" | "mitchell" | "rapid3/5/10"
+    div_scheme: Optional[str] = None   # None/"exact" | "mitchell" | "rapid3/5/9"
+    # which matmuls route through the logarithmic multiplier
+    on_mlp: bool = True
+    on_attn_proj: bool = True
+    on_logits: bool = False
+    # which divisions route through the logarithmic divider
+    on_softmax: bool = True
+    on_norm: bool = True
+    matmul_backend: str = "jnp"  # "jnp" (partitioner-visible) | "pallas" (TPU)
+
+    @property
+    def active(self) -> bool:
+        return self.mul_scheme not in (None, "exact") or self.div_scheme not in (
+            None,
+            "exact",
+        )
+
+    def mul(self, site: str) -> Optional[str]:
+        if self.mul_scheme in (None, "exact"):
+            return None
+        return self.mul_scheme if getattr(self, f"on_{site}") else None
+
+    def div(self, site: str) -> Optional[str]:
+        if self.div_scheme in (None, "exact"):
+            return None
+        return self.div_scheme if getattr(self, f"on_{site}") else None
+
+
+EXACT = ApproxConfig()
+RAPID = ApproxConfig(mul_scheme="rapid10", div_scheme="rapid9")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    act: str = "silu"  # silu (swiglu) | gelu (plain 2-matrix mlp)
+    norm: str = "rms"  # rms | ln
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    sliding_window: int = 0  # 0 = full attention
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1          # MoE FFN on every k-th layer (jamba: 2)
+    shared_expert: bool = False  # llama4-style always-on expert
+    capacity_factor: float = 1.25
+    # --- hybrid (jamba) ---
+    attn_every: int = 0         # 1 attention layer per this many (jamba: 8)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # --- xlstm ---
+    slstm_at: Tuple[int, ...] = ()  # block indices using sLSTM (rest mLSTM)
+    # --- encoder-decoder / multimodal frontends ---
+    n_encoder_layers: int = 0
+    frontend: str = ""          # "" | "audio" | "vision"
+    frontend_seq: int = 0       # encoder frames / image patch tokens
+    # --- numerics / approximation ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    approx: ApproxConfig = field(default_factory=ApproxConfig)
+    # --- training-time ---
+    remat: str = "block"        # none | block | full
+    scan_layers: bool = True
+    optimizer: str = "adamw"    # adamw | adafactor (huge MoE)
+    lr_schedule: str = "cosine"  # cosine | wsd (minicpm)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows padded to a multiple of 256 so the vocab
+        dim shards evenly (standard practice; padded ids are never
+        targets).  Odd real vocabs: minicpm 122753, whisper 51865."""
+        return -(-self.vocab_size // 256) * 256
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw = dict(
+            n_layers=min(self.n_layers, 2 if not self.attn_every else self.attn_every),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=32,
+            frontend_seq=min(self.frontend_seq, 8) if self.frontend_seq else 0,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token
+            else 0,
+            slstm_at=tuple(i for i in self.slstm_at if i < 2),
+            scan_layers=False,
+            remat="none",
+        )
+        if self.attn_every:
+            kw["n_layers"] = self.attn_every  # one full hybrid period
+        return self.with_(**kw)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG

@@ -1,0 +1,9 @@
+"""H2O-Danube-1.8B [arXiv:2401.16818]: llama+mistral mix with sliding window."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o_danube_1_8b", family="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=6912, vocab_size=32000, head_dim=80,
+    sliding_window=4096, rope_theta=10000.0,
+)

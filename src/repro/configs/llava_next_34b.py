@@ -1,0 +1,10 @@
+"""LLaVA-NeXT-34B backbone [hf:llava-hf]: Yi-34B-like decoder; anyres vision
+tiling is a stub — batches carry precomputed patch embeddings (576 tokens)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava_next_34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab_size=64000, head_dim=128,
+    frontend="vision", frontend_seq=576, rope_theta=5_000_000.0,
+)

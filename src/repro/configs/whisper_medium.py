@@ -1,0 +1,10 @@
+"""Whisper-medium backbone [arXiv:2212.04356]: enc-dec; conv frontend is a
+stub — batches carry precomputed frame embeddings (assignment brief)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper_medium", family="encdec",
+    n_layers=24, n_encoder_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51865, head_dim=64,
+    act="gelu", norm="ln", frontend="audio", frontend_seq=1500,
+)

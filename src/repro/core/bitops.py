@@ -1,0 +1,68 @@
+"""Integer bit-manipulation primitives shared by the RAPID arithmetic core.
+
+Everything here is branch-free and vectorised so it lowers cleanly inside
+``jax.jit`` *and* inside Pallas kernel bodies (which see the same jnp ops).
+A mirrored numpy implementation is provided for the offline calibration /
+exhaustive-accuracy oracles, where we want uint64 headroom without enabling
+jax x64 globally.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ilog2",
+    "ilog2_np",
+    "popcount32",
+    "smear32",
+]
+
+
+def smear32(v: jnp.ndarray) -> jnp.ndarray:
+    """Smear the leading one of each 32-bit lane down to bit 0."""
+    v = v | (v >> 1)
+    v = v | (v >> 2)
+    v = v | (v >> 4)
+    v = v | (v >> 8)
+    v = v | (v >> 16)
+    return v
+
+
+def popcount32(v: jnp.ndarray) -> jnp.ndarray:
+    """Population count for int32/uint32 lanes (SWAR, no lookup tables)."""
+    v = v - ((v >> 1) & 0x55555555)
+    v = (v & 0x33333333) + ((v >> 2) & 0x33333333)
+    v = (v + (v >> 4)) & 0x0F0F0F0F
+    return (v * 0x01010101) >> 24
+
+
+def ilog2(v: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(v)) for positive int32 lanes.
+
+    This is the software analogue of the paper's Leading-One Detector
+    (LOD): the FPGA version probes 4-bit segments with Flag-LUTs and a
+    priority mux; on TPU the VPU has no clz, so we use the classic
+    smear+popcount sequence (5 shifts/ors + SWAR popcount), which is the
+    same O(log N) depth the segmented LOD achieves in LUT logic.
+    Undefined for v <= 0 (returns -1 for v == 0).
+    """
+    v = v.astype(jnp.int32)
+    return popcount32(smear32(v)) - 1
+
+
+def ilog2_np(v: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`ilog2` with uint64 support (for oracles)."""
+    v = np.asarray(v)
+    out = np.zeros(v.shape, dtype=np.int64)
+    x = v.astype(np.uint64).copy()
+    for shift in (1, 2, 4, 8, 16, 32):
+        x |= x >> np.uint64(shift)
+    # popcount on uint64
+    x = x - ((x >> np.uint64(1)) & np.uint64(0x5555555555555555))
+    x = (x & np.uint64(0x3333333333333333)) + (
+        (x >> np.uint64(2)) & np.uint64(0x3333333333333333)
+    )
+    x = (x + (x >> np.uint64(4))) & np.uint64(0x0F0F0F0F0F0F0F0F)
+    out = ((x * np.uint64(0x0101010101010101)) >> np.uint64(56)).astype(np.int64)
+    return out - 1

@@ -1,0 +1,195 @@
+"""Derivation of RAPID error-reduction schemes.
+
+The paper partitions the (x1, x2) fraction-pair unit square — addressed by
+the 4 MSBs of each operand fraction, i.e. a 16x16 cell grid — into a small
+number of groups (3/5/10 for the multiplier, 3/5/9 for the divider), each
+with one signed coefficient added inside the fraction addition.  The exact
+partitions of Fig. 2 are derived from an error-integral analysis (following
+REALM [45]); we reproduce that derivation numerically:
+
+  1. model the continuous Mitchell relative error per cell (the paper shows
+     the error replicates across every power-of-two interval, so the
+     continuous model is bit-width independent);
+  2. per-cell L1-optimal coefficients via the weighted-median of the
+     pointwise ideal corrections;
+  3. Lloyd iterations: cluster cells into G groups by which group
+     coefficient minimises the cell's mean |relative error|, then refit
+     each group coefficient on its member cells;
+  4. the result is a (16,16)->group assignment + G coefficients, exactly
+     realisable in hardware as a casex/LUT over the 8 index bits (and on
+     TPU as a 256-entry gather).
+
+Run ``python -m repro.core.calibrate`` to regenerate ``schemes.py`` tables
+and print the continuous-domain ARE/PRE/bias for each scheme.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "continuous_rel_error",
+    "derive_scheme",
+    "scheme_metrics",
+]
+
+_GRID = 64  # sub-samples per cell axis -> 1024x1024 total points
+
+
+def _cell_points(grid: int = _GRID) -> Tuple[np.ndarray, np.ndarray]:
+    """Midpoint sub-grid of one 1/16-wide cell, offsets in [0, 1/16)."""
+    step = 1.0 / (16 * grid)
+    offs = (np.arange(grid) + 0.5) * step
+    return np.meshgrid(offs, offs, indexing="ij")
+
+
+def continuous_rel_error(
+    x1: np.ndarray, x2: np.ndarray, c: float | np.ndarray, kind: str
+) -> np.ndarray:
+    """Relative error of Mitchell+coefficient at fraction pair (x1, x2)."""
+    if kind == "mul":
+        s = x1 + x2 + c
+        approx = np.where(s < 1.0, 1.0 + s, 2.0 * s)
+        true = (1.0 + x1) * (1.0 + x2)
+    else:
+        s = x1 - x2 + c
+        approx = np.where(s >= 0.0, 1.0 + s, (2.0 + s) / 2.0)
+        true = (1.0 + x1) / (1.0 + x2)
+    return approx / true - 1.0
+
+
+def _ideal_c(x1: np.ndarray, x2: np.ndarray, kind: str) -> np.ndarray:
+    """Pointwise coefficient giving zero error (branch-aware, continuous)."""
+    if kind == "mul":
+        true = (1.0 + x1) * (1.0 + x2)  # in [1, 4)
+        return np.where(true < 2.0, true - 1.0, true / 2.0) - (x1 + x2)
+    true = (1.0 + x1) / (1.0 + x2)  # in (0.5, 2)
+    return np.where(true >= 1.0, true - 1.0, 2.0 * true - 2.0) - (x1 - x2)
+
+
+def _weighted_median(values: np.ndarray, weights: np.ndarray) -> float:
+    order = np.argsort(values)
+    v, w = values[order], weights[order]
+    cw = np.cumsum(w)
+    return float(v[np.searchsorted(cw, 0.5 * cw[-1])])
+
+
+def _polish(
+    x1: np.ndarray, x2: np.ndarray, c0: float, kind: str, span: float = 0.02
+) -> float:
+    """Local grid refinement of c around c0 on the exact L1 objective."""
+    best_c, best = c0, np.abs(continuous_rel_error(x1, x2, c0, kind)).mean()
+    for c in np.linspace(c0 - span, c0 + span, 81):
+        v = np.abs(continuous_rel_error(x1, x2, c, kind)).mean()
+        if v < best:
+            best, best_c = v, c
+    return best_c
+
+
+def derive_scheme(kind: str, n_groups: int, grid: int = _GRID, iters: int = 40):
+    """Return (assign (16,16) int array, coeffs (G,) float array)."""
+    dx1, dx2 = _cell_points(grid)
+    # Per-cell point clouds: cells[i,j] covers x1 in [i/16,(i+1)/16) etc.
+    cell_x1 = np.empty((16, 16) + dx1.shape)
+    cell_x2 = np.empty_like(cell_x1)
+    for i in range(16):
+        for j in range(16):
+            cell_x1[i, j] = i / 16.0 + dx1
+            cell_x2[i, j] = j / 16.0 + dx2
+
+    # 1) per-cell optimal coefficient
+    cell_opt = np.empty((16, 16))
+    for i in range(16):
+        for j in range(16):
+            x1, x2 = cell_x1[i, j].ravel(), cell_x2[i, j].ravel()
+            ideal = _ideal_c(x1, x2, kind)
+            true = (1 + x1) * (1 + x2) if kind == "mul" else (1 + x1) / (1 + x2)
+            c0 = _weighted_median(ideal, 1.0 / true)
+            cell_opt[i, j] = _polish(x1, x2, c0, kind)
+
+    # 2) Lloyd iterations over group coefficients
+    qs = (np.arange(n_groups) + 0.5) / n_groups
+    coeffs = np.quantile(cell_opt.ravel(), qs)
+    assign = np.zeros((16, 16), dtype=np.int64)
+    for _ in range(iters):
+        # assignment step: per cell, group minimising exact cell objective
+        new_assign = np.zeros_like(assign)
+        for i in range(16):
+            for j in range(16):
+                x1, x2 = cell_x1[i, j].ravel(), cell_x2[i, j].ravel()
+                objs = [
+                    np.abs(continuous_rel_error(x1, x2, c, kind)).mean()
+                    for c in coeffs
+                ]
+                new_assign[i, j] = int(np.argmin(objs))
+        # update step: refit each group's coefficient on its members
+        new_coeffs = coeffs.copy()
+        for g in range(n_groups):
+            mask = new_assign == g
+            if not mask.any():
+                continue
+            x1 = cell_x1[mask].ravel()
+            x2 = cell_x2[mask].ravel()
+            ideal = _ideal_c(x1, x2, kind)
+            true = (1 + x1) * (1 + x2) if kind == "mul" else (1 + x1) / (1 + x2)
+            c0 = _weighted_median(ideal, 1.0 / true)
+            new_coeffs[g] = _polish(x1, x2, c0, kind)
+        if (new_assign == assign).all() and np.allclose(new_coeffs, coeffs):
+            break
+        assign, coeffs = new_assign, new_coeffs
+    return assign, coeffs
+
+
+def scheme_metrics(assign, coeffs, kind: str, grid: int = 256):
+    """Continuous-domain (ARE%, PRE%, bias%) of a scheme."""
+    step = 1.0 / grid
+    xs = (np.arange(grid) + 0.5) * step
+    x1, x2 = np.meshgrid(xs, xs, indexing="ij")
+    i1 = np.minimum((x1 * 16).astype(np.int64), 15)
+    i2 = np.minimum((x2 * 16).astype(np.int64), 15)
+    c = np.asarray(coeffs)[np.asarray(assign)[i1, i2]]
+    re = continuous_rel_error(x1, x2, c, kind)
+    return (
+        100 * np.abs(re).mean(),
+        100 * np.abs(re).max(),
+        100 * re.mean(),
+    )
+
+
+def _fmt_assign(assign: np.ndarray) -> str:
+    rows = [
+        "        (" + ", ".join(str(int(v)) for v in row) + "),"
+        for row in assign
+    ]
+    return "    (\n" + "\n".join(rows) + "\n    )"
+
+
+def main() -> None:
+    specs = [
+        ("mul", 3, "RAPID3_MUL"),
+        ("mul", 5, "RAPID5_MUL"),
+        ("mul", 10, "RAPID10_MUL"),
+        ("div", 3, "RAPID3_DIV"),
+        ("div", 5, "RAPID5_DIV"),
+        ("div", 9, "RAPID9_DIV"),
+    ]
+    print("# Auto-generated by `python -m repro.core.calibrate` — paste into schemes.py")
+    for kind, g, name in specs:
+        assign, coeffs = derive_scheme(kind, g)
+        are, pre, bias = scheme_metrics(assign, coeffs, kind)
+        print(f"\n# {name}: continuous ARE={are:.3f}% PRE={pre:.3f}% bias={bias:+.4f}%")
+        print(f"{name} = ErrorScheme(")
+        print(f'    "{name.lower()}", "{kind}",')
+        print(_fmt_assign(assign) + ",")
+        print("    (" + ", ".join(f"{c:.8f}" for c in coeffs) + "),")
+        print(")")
+    # plain Mitchell reference numbers
+    for kind in ("mul", "div"):
+        zero = np.zeros((16, 16), dtype=np.int64)
+        are, pre, bias = scheme_metrics(zero, np.zeros(1), kind)
+        print(f"\n# MITCHELL_{kind.upper()}: ARE={are:.3f}% PRE={pre:.3f}% bias={bias:+.4f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""RAPID logarithmic arithmetic on IEEE-754 floats (the TPU-native port).
+
+The FPGA units operate on integer operands: find the leading one (k),
+treat the remaining bits as a fraction x, approximate log2 as k + x, add
+(subtract) in the log domain + a RAPID error coefficient, anti-log by a
+shift.  An IEEE-754 float *is already* the (k, x) pair: the exponent field
+is k and the mantissa field is x.  Bit-casting a positive float to an
+integer therefore yields exactly Mitchell's log approximation (scaled by
+2^23, biased by 127 << 23), so the whole Mitchell+RAPID pipeline becomes:
+
+    bits(a) + bits(b) - BIAS + coeff[idx(a), idx(b)]      (multiply)
+    bits(a) - bits(b) + BIAS + coeff[idx(a), idx(b)]      (divide)
+
+where ``idx`` is the 4 MSBs of the mantissa — precisely the paper's
+coefficient-selection index — and the mantissa-adder carry into the
+exponent field implements the ``x1+x2 >= 1`` anti-log case for free (the
+same role the ternary-adder MSB plays on the FPGA).
+
+This path is branch-free integer add + 256-entry gather per element: pure
+VPU work on TPU, no MXU, no transcendentals.  It is the building block of
+the ``log_matmul`` Pallas kernel and of the elementwise approx ops used in
+softmax/normalisation denominators.
+
+Error characteristics are *identical* to the integer units for the same
+scheme (the error depends only on the fraction pair), with mantissa
+quantisation at 2^-23 instead of the integer fraction width.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mitchell import ErrorScheme
+from repro.core import schemes
+
+__all__ = [
+    "mul_lut",
+    "div_lut",
+    "log_mul_f32",
+    "log_div_f32",
+    "log_recip_f32",
+    "approx_mul",
+    "approx_div",
+]
+
+_F32_FRAC = 23
+_F32_BIAS = np.int32(127 << 23)
+_F32_ABS = np.int32(0x7FFFFFFF)
+_F32_SIGN = np.int32(-0x80000000)
+_MIN_NORMAL = np.int32(0x00800000)
+_INF_BITS = np.int32(0x7F800000)
+
+
+def mul_lut(scheme: ErrorScheme | str) -> np.ndarray:
+    """(256,) int32 coefficient LUT for f32 multiply."""
+    if isinstance(scheme, str):
+        scheme = schemes.MUL_SCHEMES[scheme]
+    assert scheme.kind == "mul"
+    return scheme.lut(_F32_FRAC).astype(np.int32)
+
+
+def div_lut(scheme: ErrorScheme | str) -> np.ndarray:
+    """(256,) int32 coefficient LUT for f32 divide."""
+    if isinstance(scheme, str):
+        scheme = schemes.DIV_SCHEMES[scheme]
+    assert scheme.kind == "div"
+    return scheme.lut(_F32_FRAC).astype(np.int32)
+
+
+def _log_mul_bits(m1: jnp.ndarray, m2: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Magnitude-bits multiply in the log domain. m1, m2 >= 0 (int32)."""
+    i1 = (m1 >> (_F32_FRAC - 4)) & 0xF
+    i2 = (m2 >> (_F32_FRAC - 4)) & 0xF
+    c = jnp.take(lut, i1 * 16 + i2)
+    return m1 + m2 - _F32_BIAS + c
+
+
+def _log_div_bits(m1: jnp.ndarray, m2: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    i1 = (m1 >> (_F32_FRAC - 4)) & 0xF
+    i2 = (m2 >> (_F32_FRAC - 4)) & 0xF
+    c = jnp.take(lut, i1 * 16 + i2)
+    return m1 - m2 + _F32_BIAS + c
+
+
+def _finish(sum_bits: jnp.ndarray, sign: jnp.ndarray, dead: jnp.ndarray) -> jnp.ndarray:
+    """Clamp under/overflow, apply sign, zero the dead lanes, bitcast."""
+    sum_bits = jnp.where(sum_bits >= _INF_BITS, _INF_BITS, sum_bits)
+    sum_bits = jnp.where(sum_bits < _MIN_NORMAL, 0, sum_bits)  # flush subnormal
+    sum_bits = jnp.where(dead, 0, sum_bits)
+    return jax.lax.bitcast_convert_type(sum_bits | sign, jnp.float32)
+
+
+def log_mul_f32(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise RAPID approximate a*b for float32 (broadcasting ok).
+
+    Semantics: flush-to-zero for subnormals, 0*x == 0 (including 0*inf),
+    inf propagates, exponent overflow saturates to inf.
+    """
+    a, b = jnp.broadcast_arrays(a, b)
+    ba = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bb = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ba ^ bb) & _F32_SIGN
+    m1, m2 = ba & _F32_ABS, bb & _F32_ABS
+    s = _log_mul_bits(m1, m2, lut)
+    # int32 wrap detection: (m1 - BIAS) + m2 overflowed iff both halves were
+    # non-negative yet the sum is negative -> real exponent way past inf.
+    half = m1 - _F32_BIAS
+    wrapped = (half >= 0) & (s < 0)
+    s = jnp.where(wrapped | (m1 >= _INF_BITS) | (m2 >= _INF_BITS), _INF_BITS, s)
+    dead = (m1 < _MIN_NORMAL) | (m2 < _MIN_NORMAL)  # 0 * x == 0
+    return _finish(s, sign, dead)
+
+
+def log_div_f32(a: jnp.ndarray, b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise RAPID approximate a/b for float32. b==0 -> +-inf."""
+    a, b = jnp.broadcast_arrays(a, b)
+    ba = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bb = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ba ^ bb) & _F32_SIGN
+    m1, m2 = ba & _F32_ABS, bb & _F32_ABS
+    s = _log_div_bits(m1, m2, lut)
+    diff = m1 - m2
+    wrapped = (diff >= 0) & (s < 0)  # huge / tiny past inf
+    s = jnp.where(wrapped | (m1 >= _INF_BITS), _INF_BITS, s)
+    s = jnp.where(m2 < _MIN_NORMAL, _INF_BITS, s)  # x / 0
+    dead = m1 < _MIN_NORMAL  # 0 / x == 0
+    return _finish(s, sign, dead)
+
+
+def log_recip_f32(b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Approximate 1/b (division with dividend fraction fixed at zero)."""
+    return log_div_f32(jnp.ones_like(b), b, lut)
+
+
+# --------------------------------------------------------------------------
+# Public elementwise ops with scheme names + gradient support.
+#
+# The ops are near-unbiased (paper SS IV-A), so we give them straight-
+# through exact gradients: the forward pass carries the approximation, the
+# backward pass differentiates the *ideal* product/quotient.  This mirrors
+# how quantised training treats non-differentiable rounding, and is what
+# makes RAPID usable inside training graphs, not just inference.
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_jvp, nondiff_argnums=(2,))
+def approx_mul(a: jnp.ndarray, b: jnp.ndarray, scheme: str = "rapid10") -> jnp.ndarray:
+    orig = a.dtype
+    lut = jnp.asarray(mul_lut(scheme))
+    out = log_mul_f32(a.astype(jnp.float32), b.astype(jnp.float32), lut)
+    return out.astype(orig)
+
+
+@approx_mul.defjvp
+def _approx_mul_jvp(scheme, primals, tangents):
+    a, b = primals
+    da, db = tangents
+    return approx_mul(a, b, scheme), a * db + b * da
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(2,))
+def approx_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str = "rapid9") -> jnp.ndarray:
+    orig = a.dtype
+    lut = jnp.asarray(div_lut(scheme))
+    out = log_div_f32(a.astype(jnp.float32), b.astype(jnp.float32), lut)
+    return out.astype(orig)
+
+
+@approx_div.defjvp
+def _approx_div_jvp(scheme, primals, tangents):
+    a, b = primals
+    da, db = tangents
+    return approx_div(a, b, scheme), (da * b - a * db) / (b * b)

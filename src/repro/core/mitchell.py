@@ -1,0 +1,261 @@
+"""Bit-exact Mitchell logarithmic multiplier / divider with RAPID error reduction.
+
+This module is the *algorithmic ground truth* of the repo.  It provides:
+
+  * a numpy oracle (`mitchell_mul_np`, `mitchell_div_np`) with uint64
+    headroom, used for exhaustive 8-bit / sampled 16-bit / Monte-Carlo
+    32-bit accuracy characterisation (paper Table III), and
+  * a jit-safe jnp implementation (`mitchell_mul`, `mitchell_div`) for
+    8/16-bit operands (uint32 intermediates), mirrored by the Pallas
+    kernels in ``repro.kernels``.
+
+Algorithm (paper Eq. 1-7).  For N-bit unsigned A with leading one at k:
+``A = 2^k (1 + x)`` with fraction ``x in [0,1)``.  Mitchell approximates
+``log2(A) ~= k + x``.  The product log is the sum of the two parts; the
+anti-log is a shift.  RAPID adds an error-reduction coefficient ``c``
+*inside the same fraction addition* (the FPGA version uses the 6-LUT +
+carry-chain ternary adder; here it is simply a third addend), selected
+from a (16,16) lookup table indexed by the 4 MSBs of each fraction.
+
+All shifts truncate (match the hardware barrel shifter).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitops import ilog2, ilog2_np
+
+__all__ = [
+    "ErrorScheme",
+    "MITCHELL_MUL",
+    "MITCHELL_DIV",
+    "mitchell_mul_np",
+    "mitchell_div_np",
+    "mitchell_mul",
+    "mitchell_div",
+]
+
+
+@dataclass(frozen=True)
+class ErrorScheme:
+    """A RAPID error-reduction scheme.
+
+    ``assign`` maps the (i1, i2) cell — the 4 MSBs of each operand's
+    fraction — to a group id; ``coeffs`` holds one signed coefficient per
+    group, as a fraction of the fixed-point scale (i.e. in units of the
+    operand fraction, c in (-0.5, 0.5)).
+    """
+
+    name: str
+    kind: Literal["mul", "div"]
+    assign: tuple  # (16,16) nested tuple of ints -> group id
+    coeffs: tuple  # (G,) floats
+
+    @property
+    def n_coeffs(self) -> int:
+        return len(self.coeffs)
+
+    def lut(self, frac_bits: int) -> np.ndarray:
+        """Flat (256,) int64 LUT of fixed-point coefficients at ``frac_bits``."""
+        a = np.asarray(self.assign, dtype=np.int64).reshape(16, 16)
+        c = np.asarray(self.coeffs, dtype=np.float64)
+        return np.round(c[a] * (1 << frac_bits)).astype(np.int64).reshape(-1)
+
+
+# Plain Mitchell == the degenerate single-coefficient-zero scheme.
+_ZERO_ASSIGN = tuple(tuple(0 for _ in range(16)) for _ in range(16))
+MITCHELL_MUL = ErrorScheme("mitchell", "mul", _ZERO_ASSIGN, (0.0,))
+MITCHELL_DIV = ErrorScheme("mitchell", "div", _ZERO_ASSIGN, (0.0,))
+
+
+# --------------------------------------------------------------------------
+# numpy oracle (uint64 headroom; exact for operands up to 32 bits)
+# --------------------------------------------------------------------------
+
+def _frac_align_np(v: np.ndarray, k: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Fraction bits of v (below the leading one), left-aligned to frac_bits."""
+    frac = v.astype(np.int64) - (np.int64(1) << k)
+    return frac << (frac_bits - k)
+
+
+def mitchell_mul_np(
+    a: np.ndarray,
+    b: np.ndarray,
+    scheme: ErrorScheme = MITCHELL_MUL,
+    n_bits: int = 16,
+    quantize: bool = True,
+) -> np.ndarray:
+    """Approximate a*b for unsigned operands (< 2**n_bits). Exact zeros.
+
+    ``quantize=True`` matches the hardware barrel shifter (integer output,
+    truncating).  ``quantize=False`` returns the full fixed-point value as
+    float64 — this is the convention under which the paper's Table III
+    accuracy numbers are reported (the output fraction bits are part of
+    the datapath; error metrics are over the real-valued result).
+    """
+    assert scheme.kind == "mul"
+    a = np.asarray(a, dtype=np.uint64).astype(np.int64)
+    b = np.asarray(b, dtype=np.uint64).astype(np.int64)
+    F = n_bits - 1
+    lut = scheme.lut(F)
+
+    k1 = ilog2_np(np.maximum(a, 1))
+    k2 = ilog2_np(np.maximum(b, 1))
+    f1 = _frac_align_np(a, k1, F)
+    f2 = _frac_align_np(b, k2, F)
+    i1 = (f1 >> (F - 4)) & 0xF
+    i2 = (f2 >> (F - 4)) & 0xF
+    c = lut[i1 * 16 + i2]
+
+    s = f1 + f2 + c
+    ksum = k1 + k2
+    one = np.int64(1) << F
+    # branch: s < 2^F  ->  2^ksum * (1 + s/2^F) ; else 2^(ksum+1) * (s/2^F)
+    carry = s >= one
+    mant = np.where(carry, s, s + one).astype(np.uint64)  # in [2^F, 2.25*2^F)
+    shift = ksum + carry.astype(np.int64) - F
+    # guard negative coefficients driving s below 0 in near-zero-fraction cells
+    mant = np.maximum(mant.astype(np.int64), 0).astype(np.uint64)
+    if not quantize:
+        val = mant.astype(np.float64) * np.exp2(shift.astype(np.float64))
+        return np.where((a == 0) | (b == 0), 0.0, val)
+    pos = np.maximum(shift, 0).astype(np.uint64)
+    neg = np.maximum(-shift, 0).astype(np.uint64)
+    res = (mant << pos) >> neg
+    return np.where((a == 0) | (b == 0), np.uint64(0), res)
+
+
+def mitchell_div_np(
+    a: np.ndarray,
+    b: np.ndarray,
+    scheme: ErrorScheme = MITCHELL_DIV,
+    n_bits: int = 16,
+    quantize: bool = True,
+) -> np.ndarray:
+    """Approximate a/b (truncated) for unsigned a < 2**(2*n_bits), b < 2**n_bits.
+
+    Follows the paper's 2N-by-N divider; b == 0 returns the saturated max.
+    ``quantize=False`` returns the full fixed-point quotient (float64) —
+    the convention of the paper's accuracy tables.
+    """
+    assert scheme.kind == "div"
+    a = np.asarray(a, dtype=np.uint64).astype(np.int64)
+    b = np.asarray(b, dtype=np.uint64).astype(np.int64)
+    F = 2 * n_bits - 1
+    lut = scheme.lut(F)
+
+    k1 = ilog2_np(np.maximum(a, 1))
+    k2 = ilog2_np(np.maximum(b, 1))
+    f1 = _frac_align_np(a, k1, F)
+    f2 = _frac_align_np(b, k2, F)
+    i1 = (f1 >> (F - 4)) & 0xF
+    i2 = (f2 >> (F - 4)) & 0xF
+    c = lut[i1 * 16 + i2]
+
+    s = f1 - f2 + c
+    kdiff = k1 - k2
+    one = np.int64(1) << F
+    borrow = s < 0
+    # branch: s >= 0 -> 2^kdiff * (1 + s/2^F) ; else 2^(kdiff-1) * (2 + s/2^F)
+    mant = np.where(borrow, s + 2 * one, s + one)
+    mant = np.maximum(mant, 0)
+    shift = kdiff - borrow.astype(np.int64) - F
+    if not quantize:
+        val = mant.astype(np.float64) * np.exp2(shift.astype(np.float64))
+        val = np.where(a == 0, 0.0, val)
+        return np.where(b == 0, np.inf, val)
+    pos = np.maximum(shift, 0).astype(np.uint64)
+    neg = np.minimum(np.maximum(-shift, 0), 63).astype(np.uint64)
+    res = (mant.astype(np.uint64) << pos) >> neg
+    res = np.where(a == 0, np.uint64(0), res)
+    sat = np.uint64((1 << (2 * n_bits)) - 1)
+    return np.where(b == 0, sat, res)
+
+
+# --------------------------------------------------------------------------
+# jnp implementation (8/16-bit operands, int32/uint32 intermediates)
+# --------------------------------------------------------------------------
+
+def _frac_align(v: jnp.ndarray, k: jnp.ndarray, frac_bits: int) -> jnp.ndarray:
+    frac = v - (jnp.int32(1) << k)
+    return frac << (frac_bits - k)
+
+
+def mitchell_mul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scheme: ErrorScheme = MITCHELL_MUL,
+    n_bits: int = 16,
+) -> jnp.ndarray:
+    """jnp Mitchell/RAPID multiply for unsigned operands < 2**n_bits (<=16).
+
+    Returns uint32 (saturated at 2**32-1, which is unreachable for exact
+    16-bit products and only marginally reachable for approximations of
+    near-maximal operands).
+    """
+    assert scheme.kind == "mul" and n_bits <= 16
+    F = n_bits - 1
+    lut = jnp.asarray(scheme.lut(F), dtype=jnp.int32)
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+
+    k1 = ilog2(jnp.maximum(a, 1))
+    k2 = ilog2(jnp.maximum(b, 1))
+    f1 = _frac_align(a, k1, F)
+    f2 = _frac_align(b, k2, F)
+    i1 = (f1 >> (F - 4)) & 0xF
+    i2 = (f2 >> (F - 4)) & 0xF
+    c = jnp.take(lut, i1 * 16 + i2)
+
+    s = f1 + f2 + c
+    ksum = k1 + k2
+    one = jnp.int32(1) << F
+    carry = (s >= one).astype(jnp.int32)
+    mant = jnp.maximum(jnp.where(carry == 1, s, s + one), 0).astype(jnp.uint32)
+    shift = ksum + carry - F  # in [-(F), n_bits]
+    pos = jnp.maximum(shift, 0).astype(jnp.uint32)
+    neg = jnp.maximum(-shift, 0).astype(jnp.uint32)
+    res = (mant << pos) >> neg
+    # saturate: if mant would overflow uint32 on the left shift
+    hi_bits = ilog2(jnp.maximum(mant.astype(jnp.int32), 1)) + shift
+    res = jnp.where(hi_bits >= 32, jnp.uint32(0xFFFFFFFF), res)
+    return jnp.where((a == 0) | (b == 0), jnp.uint32(0), res)
+
+
+def mitchell_div(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scheme: ErrorScheme = MITCHELL_DIV,
+    n_bits: int = 8,
+) -> jnp.ndarray:
+    """jnp Mitchell/RAPID divide: a < 2**(2*n_bits), b < 2**n_bits (n_bits<=15)."""
+    assert scheme.kind == "div" and 2 * n_bits <= 31
+    F = 2 * n_bits - 1
+    lut = jnp.asarray(scheme.lut(F), dtype=jnp.int32)
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+
+    k1 = ilog2(jnp.maximum(a, 1))
+    k2 = ilog2(jnp.maximum(b, 1))
+    f1 = _frac_align(a, k1, F)
+    f2 = _frac_align(b, k2, F)
+    i1 = (f1 >> (F - 4)) & 0xF
+    i2 = (f2 >> (F - 4)) & 0xF
+    c = jnp.take(lut, i1 * 16 + i2)
+
+    s = f1 - f2 + c
+    kdiff = k1 - k2
+    one = jnp.int32(1) << F
+    borrow = (s < 0).astype(jnp.int32)
+    mant = jnp.maximum(jnp.where(borrow == 1, s + 2 * one, s + one), 0)
+    shift = kdiff - borrow - F
+    pos = jnp.maximum(shift, 0).astype(jnp.uint32)
+    neg = jnp.minimum(jnp.maximum(-shift, 0), 31).astype(jnp.uint32)
+    res = (mant.astype(jnp.uint32) << pos) >> neg
+    res = jnp.where(a == 0, jnp.uint32(0), res)
+    sat = jnp.uint32((1 << (2 * n_bits)) - 1)
+    return jnp.where(b == 0, sat, res)

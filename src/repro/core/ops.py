@@ -1,0 +1,166 @@
+"""Public RAPID arithmetic API used by the model zoo and applications.
+
+Two execution paths exist for every op:
+
+  * ``jnp``    — a chunked pure-jnp formulation (bitcast + integer add +
+                 256-gather + reduce).  This is what the pjit/GSPMD
+                 partitioner sees for the multi-pod dry-run, and the oracle
+                 the Pallas kernels are tested against.
+  * ``pallas`` — the TPU kernel in ``repro.kernels.log_matmul`` (VMEM
+                 tiled, grid-pipelined).  Selected via ``backend="pallas"``
+                 by the launcher when running on real TPU.
+
+Gradients: RAPID forward ops are near-unbiased (paper SS IV-A, SS V-B), so
+training uses straight-through exact gradients (standard QAT practice).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+
+__all__ = [
+    "qmatmul",
+    "qeinsum_mk_kn",
+    "approx_softmax",
+    "approx_rms_normalize",
+    "approx_mean",
+]
+
+
+def _log_matmul_jnp(
+    x: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray, chunk: int
+) -> jnp.ndarray:
+    """RAPID matmul x[M,K] @ w[K,N] via K-chunked log-domain products."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    chunk = min(chunk, k)
+    pad = (-k) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    steps = (k + pad) // chunk
+    xs = x.reshape(m, steps, chunk).transpose(1, 0, 2)  # [steps, M, C]
+    ws = w.reshape(steps, chunk, n)  # [steps, C, N]
+
+    def body(acc, operands):
+        xc, wc = operands
+        prod = fa.log_mul_f32(xc[:, :, None], wc[None, :, :], lut)  # [M,C,N]
+        return acc + prod.sum(axis=1), None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xs, ws))
+    return acc
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scheme: Optional[str] = None,
+    chunk: int = 64,
+    backend: str = "jnp",
+) -> jnp.ndarray:
+    """Contract the last dim of ``x`` with the first dim of ``w``.
+
+    ``scheme=None`` (or "exact") is the accurate MXU path; any RAPID/
+    Mitchell scheme name routes through the logarithmic multiplier.
+    Output dtype follows ``x``; RAPID internals are f32.
+
+    The exact path is a *plain* dot (fully transparent to autodiff and
+    remat policies); the approximate path is a custom_vjp with straight-
+    through exact gradients.
+    """
+    if scheme in (None, "exact"):
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    return _qmatmul_approx(x, w, scheme, chunk, backend)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _qmatmul_approx(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scheme: str,
+    chunk: int = 64,
+    backend: str = "jnp",
+) -> jnp.ndarray:
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    w2 = w.reshape(k, -1).astype(jnp.float32)
+    if backend == "pallas":
+        from repro.kernels.log_matmul.ops import log_matmul
+
+        out = log_matmul(x2, w2, scheme)
+    else:
+        lut = jnp.asarray(fa.mul_lut(scheme))
+        out = _log_matmul_jnp(x2, w2, lut, chunk)
+    return out.reshape(*lead, *w.shape[1:]).astype(x.dtype)
+
+
+def _qmatmul_fwd(x, w, scheme, chunk, backend):
+    return _qmatmul_approx(x, w, scheme, chunk, backend), (x, w)
+
+
+def _qmatmul_bwd(scheme, chunk, backend, res, g):
+    x, w = res
+    # straight-through: exact transposed contractions for the cotangents
+    g2 = g.reshape(-1, w.shape[1:][-1] if w.ndim > 1 else 1)
+    x2 = x.reshape(-1, x.shape[-1])
+    dx = jnp.dot(g2, w.reshape(x.shape[-1], -1).T).reshape(x.shape)
+    dw = jnp.dot(x2.T, g2).reshape(w.shape)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_qmatmul_approx.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def qeinsum_mk_kn(x, w, scheme=None, **kw):
+    """Alias kept for symmetry with the kernels' ref.py naming."""
+    return qmatmul(x, w, scheme, **kw)
+
+
+def approx_softmax(
+    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None
+) -> jnp.ndarray:
+    """Softmax whose normalisation uses the RAPID divider.
+
+    The exp() stays exact (the paper approximates only mul/div); the
+    denominator division — the op that dominates softmax cost on the
+    FPGA datapath — is replaced by the logarithmic divider.
+    """
+    x_max = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = jnp.exp(x - x_max)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    if div_scheme in (None, "exact"):
+        return e / denom
+    return fa.approx_div(e, denom, div_scheme).astype(x.dtype)
+
+
+def approx_rms_normalize(
+    x: jnp.ndarray, eps: float = 1e-6, div_scheme: Optional[str] = None
+) -> jnp.ndarray:
+    """x / sqrt(mean(x^2) + eps) with an optional RAPID divider."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    denom = jnp.sqrt(var + eps)
+    if div_scheme in (None, "exact"):
+        return (x.astype(jnp.float32) / denom).astype(x.dtype)
+    return fa.approx_div(x.astype(jnp.float32), denom, div_scheme).astype(x.dtype)
+
+
+def approx_mean(
+    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None
+) -> jnp.ndarray:
+    """Mean whose final divide uses the RAPID divider (used by the apps)."""
+    s = jnp.sum(x, axis=axis)
+    n = jnp.float32(x.shape[axis])
+    if div_scheme in (None, "exact"):
+        return s / n
+    return fa.approx_div(s.astype(jnp.float32), n, div_scheme).astype(x.dtype)

@@ -1,0 +1,60 @@
+"""Truncation-based approximate baselines (DRUM / AAXD style).
+
+The paper's circuit-level and application-level comparisons include the
+dynamically-truncated DRUM multiplier [47] and AAXD divider [37]: select
+k bits starting at the leading one, set the dropped LSB region to its
+midpoint (DRUM's unbiasing trick), operate exactly on the k-bit values,
+shift back.  We implement the float-mantissa analogue (truncate the
+mantissa to k-1 fraction bits, force the next bit to 1): it has the same
+relative-error profile as the integer unit, which is what the QoR
+comparison needs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["drum_mul_f32", "aaxd_div_f32"]
+
+_ABS = 0x7FFFFFFF
+_SIGN = -0x80000000
+_FRAC = 23
+
+
+def _truncate_mantissa(bits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Keep k-1 mantissa MSBs, set the k-th to 1 (midpoint unbiasing)."""
+    drop = _FRAC - (k - 1)
+    mask = jnp.int32(-1) << drop
+    mid = jnp.int32(1) << (drop - 1)
+    return (bits & mask) | mid
+
+
+def drum_mul_f32(a: jnp.ndarray, b: jnp.ndarray, k: int = 6) -> jnp.ndarray:
+    """DRUM-k style approximate product on f32."""
+    ba = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.int32)
+    bb = jax.lax.bitcast_convert_type(b.astype(jnp.float32), jnp.int32)
+    sign = (ba ^ bb) & _SIGN
+    ta = _truncate_mantissa(ba & _ABS, k)
+    tb = _truncate_mantissa(bb & _ABS, k)
+    fa = jax.lax.bitcast_convert_type(ta, jnp.float32)
+    fb = jax.lax.bitcast_convert_type(tb, jnp.float32)
+    prod = fa * fb
+    pb = jax.lax.bitcast_convert_type(prod, jnp.int32) & _ABS
+    out = jax.lax.bitcast_convert_type(pb | sign, jnp.float32)
+    return jnp.where((a == 0) | (b == 0), 0.0, out)
+
+
+def aaxd_div_f32(a: jnp.ndarray, b: jnp.ndarray, k: int = 8) -> jnp.ndarray:
+    """AAXD-style approximate quotient on f32 (truncate both operands)."""
+    ba = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.int32)
+    bb = jax.lax.bitcast_convert_type(b.astype(jnp.float32), jnp.int32)
+    sign = (ba ^ bb) & _SIGN
+    ta = _truncate_mantissa(ba & _ABS, k)
+    tb = _truncate_mantissa(bb & _ABS, max(2, k // 2))
+    fa = jax.lax.bitcast_convert_type(ta, jnp.float32)
+    fb = jax.lax.bitcast_convert_type(tb, jnp.float32)
+    quo = fa / fb
+    qb = jax.lax.bitcast_convert_type(quo, jnp.int32) & _ABS
+    out = jax.lax.bitcast_convert_type(qb | sign, jnp.float32)
+    out = jnp.where(a == 0, 0.0, out)
+    return jnp.where(b == 0, jnp.inf * jnp.sign(a), out)

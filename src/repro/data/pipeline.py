@@ -1,0 +1,107 @@
+"""Deterministic, resumable, sharded data pipeline.
+
+Two sources:
+  * ``SyntheticLM``  — seeded on (seed, step), so any step's batch can be
+    regenerated exactly — restart-safe without saving cursor state;
+  * ``BinCorpus``    — memory-mapped uint16/uint32 token file, strided
+    into fixed-length windows; the cursor is ``step`` alone, making the
+    iterator state a single int64 in the checkpoint.
+
+Both yield *global* batches; per-host slicing for multi-process runs is a
+``host_slice`` view over the global batch (process i takes rows
+[i*B/nproc, (i+1)*B/nproc)) so every host touches only its shard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterator, Optional
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "BinCorpus", "host_slice"]
+
+
+@dataclass
+class SyntheticLM:
+    """Zipf-ish synthetic token stream (deterministic per step)."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        # Zipf-like marginal over the vocab: realistic CE trajectories
+        z = rng.zipf(1.3, size=(self.global_batch, self.seq_len + 1))
+        toks = np.minimum(z, self.vocab_size - 1).astype(np.int32)
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclass
+class BinCorpus:
+    """Flat binary token corpus, memory-mapped, strided windows."""
+
+    path: str
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    dtype: str = "uint16"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        self._n_windows = (len(self._data) - 1) // self.seq_len
+        if self._n_windows < self.global_batch:
+            raise ValueError(
+                f"corpus {self.path} too small: {self._n_windows} windows")
+        rng = np.random.default_rng(self.seed)
+        self._perm = rng.permutation(self._n_windows)
+
+    def batch_at(self, step: int) -> dict:
+        idx = [
+            self._perm[(step * self.global_batch + i) % self._n_windows]
+            for i in range(self.global_batch)
+        ]
+        rows = np.stack([
+            self._data[j * self.seq_len: j * self.seq_len + self.seq_len + 1]
+            for j in idx
+        ]).astype(np.int32)
+        rows = np.minimum(rows, self.vocab_size - 1)
+        return {"tokens": rows[:, :-1], "targets": rows[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def host_slice(batch: dict, process_index: int, process_count: int) -> dict:
+    """Rows of the global batch owned by this host."""
+    def one(x):
+        b = x.shape[0]
+        per = b // process_count
+        return x[process_index * per:(process_index + 1) * per]
+
+    return {k: one(v) for k, v in batch.items()}
+
+
+def make_source(name: str, cfg, shape, seed: int = 0,
+                path: Optional[str] = None):
+    if name == "synthetic":
+        return SyntheticLM(cfg.vocab_size, shape["seq_len"],
+                           shape["global_batch"], seed)
+    if name == "bin":
+        assert path and Path(path).exists(), path
+        return BinCorpus(path, cfg.vocab_size, shape["seq_len"],
+                         shape["global_batch"], seed=seed)
+    raise ValueError(name)

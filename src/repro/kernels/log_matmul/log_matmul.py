@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: RAPID logarithmic approximate matmul.
+
+TPU adaptation of the paper's pipelined multiplier array.  The FPGA
+pipeline stages (LOD -> log-add+coefficient -> anti-log shift) become a
+single fused VPU expression per element — on IEEE floats the LOD/anti-log
+are free (they are the exponent field), so each approximate product is
+one int32 add + one 256-entry coefficient gather.  The *pipelining* that
+the paper implements with explicit register stages is realised here by the
+Pallas grid pipeline: HBM->VMEM DMA for the next (bm x bk)/(bk x bn) tiles
+is overlapped with VPU compute on the current tiles (a hardware-managed
+2-deep double buffer per operand — the TPU analogue of the paper's 2-/3-/
+4-stage configurations; see DESIGN.md SSPipelining).
+
+Grid layout: (M/bm, N/bn, K/bk); M, N are parallel, K is sequential and
+accumulates into the output tile (revisited across the K dimension).
+VMEM working set: bm*bk + bk*bn + bm*bn floats + the 1 KiB coefficient
+LUT.  MXU is untouched; arithmetic is pure VPU int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32_BIAS = 127 << 23
+F32_ABS = 0x7FFFFFFF
+F32_SIGN = -0x80000000
+MIN_NORMAL = 0x00800000
+INF_BITS = 0x7F800000
+
+
+def _approx_prod(bx_col: jnp.ndarray, bw_row: jnp.ndarray, lut: jnp.ndarray):
+    """One rank-1 slab of approximate products from log-domain bits.
+
+    bx_col: [bm, 1] int32 operand bits; bw_row: [1, bn] int32; returns
+    [bm, bn] float32 approximate products.
+    """
+    s1 = bx_col & F32_SIGN
+    s2 = bw_row & F32_SIGN
+    m1 = bx_col & F32_ABS
+    m2 = bw_row & F32_ABS
+    i1 = (m1 >> 19) & 0xF
+    i2 = (m2 >> 19) & 0xF
+    c = lut[(i1 * 16 + i2).astype(jnp.int32)]
+    s = m1 + m2 - F32_BIAS + c
+    s = jnp.where(s < MIN_NORMAL, 0, s)
+    s = jnp.where(s >= INF_BITS, INF_BITS, s)
+    dead = (m1 < MIN_NORMAL) | (m2 < MIN_NORMAL)
+    s = jnp.where(dead, 0, s)
+    return jax.lax.bitcast_convert_type(s | (s1 ^ s2), jnp.float32)
+
+
+def _kernel(x_ref, w_ref, lut_ref, o_ref, *, bk: int, unroll: int):
+    """Accumulate one (bm, bn) output tile over the current K block."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bx = jax.lax.bitcast_convert_type(x_ref[...], jnp.int32)  # [bm, bk]
+    bw = jax.lax.bitcast_convert_type(w_ref[...], jnp.int32)  # [bk, bn]
+    lut = lut_ref[...]
+
+    def body(t, acc):
+        for u in range(unroll):
+            k = t * unroll + u
+            acc = acc + _approx_prod(bx[:, k][:, None], bw[k, :][None, :], lut)
+        return acc
+
+    acc = jnp.zeros_like(o_ref)
+    acc = jax.lax.fori_loop(0, bk // unroll, body, acc)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "unroll", "interpret"),
+)
+def log_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    unroll: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x[M,K] @ w[K,N] with RAPID approximate products. f32 in/out.
+
+    M, N, K must be divisible by the block sizes (ops.py pads).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, unroll=unroll),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((256,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, w, lut)

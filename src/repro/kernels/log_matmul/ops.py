@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the log_matmul kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+from repro.kernels.log_matmul.log_matmul import log_matmul_pallas
+
+__all__ = ["log_matmul"]
+
+
+def _pick_blocks(m: int, n: int, k: int):
+    """Choose hardware-aligned block sizes that fit comfortably in VMEM."""
+    bm = min(256, max(8, m))
+    bn = min(256, max(128, n))
+    bk = min(512, max(128, k))
+    return bm, bn, bk
+
+
+def log_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scheme: str = "rapid10",
+    *,
+    blocks=None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """RAPID approximate x @ w (f32). Pads every dim to the block grid."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    lut = jnp.asarray(fa.mul_lut(scheme))
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = blocks or _pick_blocks(m, n, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
+    out = log_matmul_pallas(xp, wp, lut, bm=bm, bn=bn, bk=bk,
+                            unroll=min(8, bk), interpret=interpret)
+    return out[:m, :n]

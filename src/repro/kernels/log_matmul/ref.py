@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the log_matmul Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+
+
+def log_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Unchunked reference: materialises the full [M,K,N] product tensor."""
+    prod = fa.log_mul_f32(
+        x.astype(jnp.float32)[:, :, None], w.astype(jnp.float32)[None, :, :], lut
+    )
+    return prod.sum(axis=1)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for rapid_div: flatten, pad to the block grid, dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes
+from repro.kernels.rapid_div.rapid_div import rapid_div_pallas
+
+__all__ = ["rapid_div"]
+
+
+def rapid_div(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scheme: str = "rapid9",
+    n_bits: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Elementwise RAPID a/b: a < 2**(2*n_bits), b < 2**n_bits."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    sch = schemes.DIV_SCHEMES[scheme]
+    lut = jnp.asarray(sch.lut(2 * n_bits - 1), dtype=jnp.int32)
+    shape = a.shape
+    af = a.reshape(-1).astype(jnp.uint32)
+    bf = b.reshape(-1).astype(jnp.uint32)
+    bc, br = 128, 8
+    pad = (-af.size) % (br * bc)
+    af = jnp.pad(af, (0, pad), constant_values=1).reshape(-1, bc)
+    bf = jnp.pad(bf, (0, pad), constant_values=1).reshape(-1, bc)
+    rows = af.shape[0]
+    rpad = (-rows) % br
+    af = jnp.pad(af, ((0, rpad), (0, 0)), constant_values=1)
+    bf = jnp.pad(bf, ((0, rpad), (0, 0)), constant_values=1)
+    out = rapid_div_pallas(af, bf, lut, n_bits=n_bits, block=(br, bc),
+                           interpret=interpret)
+    return out.reshape(-1)[: a.size].reshape(shape)

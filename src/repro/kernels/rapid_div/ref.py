@@ -1,0 +1,2 @@
+"""Oracle for the rapid_div kernel: the core jnp Mitchell divider."""
+from repro.core.mitchell import mitchell_div as rapid_div_ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd wrapper for rapid_mul: flatten, pad to the block grid, dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes
+from repro.kernels.rapid_mul.rapid_mul import rapid_mul_pallas
+
+__all__ = ["rapid_mul"]
+
+
+def rapid_mul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scheme: str = "rapid10",
+    n_bits: int = 16,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Elementwise RAPID approximate product of unsigned ints < 2**n_bits."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    sch = schemes.MUL_SCHEMES[scheme]
+    lut = jnp.asarray(sch.lut(n_bits - 1), dtype=jnp.int32)
+    shape = a.shape
+    af = a.reshape(-1).astype(jnp.uint32)
+    bf = b.reshape(-1).astype(jnp.uint32)
+    bc = 128
+    br = 8
+    pad = (-af.size) % (br * bc)
+    af = jnp.pad(af, (0, pad)).reshape(-1, bc)
+    bf = jnp.pad(bf, (0, pad)).reshape(-1, bc)
+    rows = af.shape[0]
+    rpad = (-rows) % br
+    af = jnp.pad(af, ((0, rpad), (0, 0)))
+    bf = jnp.pad(bf, ((0, rpad), (0, 0)))
+    out = rapid_mul_pallas(af, bf, lut, n_bits=n_bits, block=(br, bc),
+                           interpret=interpret)
+    return out.reshape(-1)[: a.size].reshape(shape)

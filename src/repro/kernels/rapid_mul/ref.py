@@ -1,0 +1,2 @@
+"""Oracle for the rapid_mul kernel: the core jnp Mitchell multiplier."""
+from repro.core.mitchell import mitchell_mul as rapid_mul_ref  # noqa: F401

@@ -1,0 +1,266 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The FIRST two lines below must run before any other import (jax locks the
+device count on first init).  This is the only entry point that fakes 512
+host devices — tests and benchmarks see the real single device.
+
+Per cell we AOT-compile the real step function (train_step with optimizer
+update / prefill / decode) against ShapeDtypeStruct stand-ins — no memory
+is allocated — then record:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits HBM),
+  * cost_analysis()    — XLA's own numbers (kept for reference),
+  * analyze_hlo()      — trip-weighted flops / HBM bytes / collective
+                         bytes parsed from the compiled HLO,
+  * the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio.
+
+Results are cached as JSON under experiments/dryrun/; rerun with --force
+to refresh.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--approx]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, RAPID, SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.input_specs import cell_struct, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import ParallelCtx
+from repro.parallel.sharding import make_rules
+from repro.train.trainstep import make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for the cell's token count."""
+    from repro.models.model import Model
+    from repro.models.params import count_params
+
+    total = count_params(Model(cfg).param_specs())
+    if cfg.n_experts:
+        # active params: replace expert count by experts_per_token
+        dense_like = total
+        spec = Model(cfg).param_specs()
+        import numpy as np
+
+        moe_leaves = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                spec, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))[0]:
+            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if any(n in ("w1", "w2", "w3") for n in names) and "expert" in leaf.axes:
+                moe_leaves += int(np.prod(leaf.shape))
+        active = total - moe_leaves + moe_leaves * (
+            cfg.experts_per_token / cfg.n_experts)
+        total = active
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * total * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * total * tokens
+    return 2.0 * total * sh["global_batch"]  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             approx: bool = False, force: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    tag = f"{arch}__{shape_name}__{mesh_tag}" + ("__rapid" if approx else "")
+    out_path = OUT_DIR / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if approx:
+        cfg = cfg.with_(approx=RAPID)
+    reason = skip_reason(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "approx": approx, "time": time.strftime("%F %T")}
+    if reason:
+        rec["skipped"] = reason
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    shard_cache_seq = kind in ("decode", "prefill") and cfg.family != "ssm"
+    # pure DP/FSDP pays off only while params+moments fit under data-axis
+    # FSDP (~<= 12B params at f32 Adam on 16 GB chips)
+    from repro.models.params import count_params
+    from repro.models.model import Model as _M
+
+    n_params = count_params(_M(cfg).param_specs())
+    pure_dp = (kind == "train" and cfg.n_experts == 0
+               and sh["global_batch"] % n_chips == 0
+               and n_params <= 12e9)
+    rules = make_rules(cfg, multi_pod=multi_pod,
+                       shard_cache_seq=shard_cache_seq,
+                       shard_batch=sh["global_batch"] > 1,
+                       seq_parallel=kind != "decode",
+                       pure_dp=pure_dp)
+    ctx = ParallelCtx(mesh, rules)
+    cell = cell_struct(cfg, shape_name, rules, mesh)
+    model = cell["model"]
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    # gradient-accumulation microbatches for the biggest models: the
+    # per-microbatch activation footprint is what must fit HBM
+    microbatches = {"jamba_1_5_large_398b": 8, "qwen3_moe_235b_a22b": 8,
+                    "llava_next_34b": 2, "llama4_scout_17b_a16e": 4}.get(
+                        arch, 1) if kind == "train" else 1
+    try:
+        if kind == "train":
+            _, train_step = make_train_step(model, cell["opt_cfg"], ctx,
+                                            microbatches=microbatches)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(cell["params_shardings"], cell["opt_shardings"],
+                              cell["batch_shardings"], repl),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(cell["params"], cell["opt"], cell["batch"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        elif kind == "prefill":
+            S = sh["seq_len"]
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, ctx, cache_n=S)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(cell["params_shardings"], cell["batch_shardings"]),
+                out_shardings=(None, cell["cache_shardings"]),
+            )
+            lowered = jitted.lower(cell["params"], cell["batch"])
+        else:  # decode
+            seq_axis = "model" if shard_cache_seq else None
+
+            def decode_fn(params, tokens, cache):
+                return model.decode_step(params, tokens, cache, ctx,
+                                         seq_shard_axis=seq_axis)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(cell["params_shardings"],
+                              cell["batch_shardings"]["tokens"],
+                              cell["cache_shardings"]),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(cell["params"], cell["batch"]["tokens"],
+                                   cell["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # record the failure for triage
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-4000:]
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+        raise
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo)
+    terms = roofline_terms(ana["flops"], ana["hbm_bytes"],
+                           ana["collectives"]["total"])
+    mf = model_flops(cfg, shape_name)
+    hlo_flops_total = ana["flops"] * n_chips
+    rec.update({
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_chips": n_chips,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": (mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed", "transcendentals")},
+        "hlo_analysis": {
+            "flops_per_dev": ana["flops"],
+            "hbm_bytes_per_dev": ana["hbm_bytes"],
+            "collectives_per_dev": ana["collectives"],
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "useful_flops_ratio": mf / hlo_flops_total if hlo_flops_total else None,
+    })
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--approx", action="store_true",
+                    help="RAPID approximate mode (paper technique on)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    ok = fail = skip = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           approx=args.approx, force=args.force)
+            if "skipped" in rec:
+                skip += 1
+                print(f"[SKIP] {arch} {shape}: {rec['skipped'][:80]}")
+            else:
+                ok += 1
+                r = rec["roofline"]
+                print(f"[ OK ] {arch} {shape} ({rec['mesh']}): "
+                      f"compile={rec.get('compile_s', '?')}s "
+                      f"dominant={r['dominant']} "
+                      f"c/m/coll={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+                      f"{r['collective_s']:.2e}s "
+                      f"mem={rec['memory']['per_device_total']/2**30:.2f}GiB")
+        except Exception as e:
+            fail += 1
+            print(f"[FAIL] {arch} {shape}: {type(e).__name__}: {str(e)[:200]}")
+    print(f"\n{ok} ok, {skip} skipped, {fail} failed")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

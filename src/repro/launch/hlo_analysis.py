@@ -1,0 +1,252 @@
+"""Post-compile HLO analysis: trip-weighted flops / HBM bytes / collective
+bytes, and the three-term roofline.
+
+Why not just ``compiled.cost_analysis()``: XLA's module-level cost
+analysis visits each ``while`` body **once**, so a lax.scan over L layers
+under-counts flops/bytes by ~L x.  We therefore walk the post-SPMD HLO
+text ourselves:
+
+  * ``while`` bodies are weighted by ``backend_config known_trip_count``
+    (fallback: the largest constant in the loop condition);
+  * flops:   2 * result_elems * contracted_elems for every ``dot`` (and
+    dots inside fusions), the near-total of real FLOPs;
+  * HBM bytes: sum of result+operand bytes of every top-level instruction
+    (fusion internals excluded — a fusion's operands/results are exactly
+    its HBM traffic);
+  * collective bytes per device: ring-model bytes for all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+All shapes in post-SPMD HLO are per-device shards, so every number this
+module produces is *per device*.
+
+Hardware model (TPU v5e-like, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+__all__ = ["HW", "analyze_hlo", "roofline_terms", "parse_hlo_collectives"]
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"([a-z][\w\-\$]*)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))")
+_TRIP_RE = re.compile(r'known_trip_count[="{\\]+n[\\":]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,\s]+)\}")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12     # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9          # bytes/s per chip
+    ici_bw: float = 50e9           # bytes/s per link (per chip)
+
+
+def _shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_bytes(shape_str: str) -> int:
+    if shape_str.startswith("("):
+        return sum(_shape_bytes(s.strip())
+                   for s in shape_str[1:-1].split(",") if "[" in s)
+    dt, dims = _shape_dims(shape_str)
+    if dt not in _DT_BYTES:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DT_BYTES[dt]
+
+
+class _Module:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.shapes: Dict[str, Dict[str, str]] = {}
+        current = None
+        for line in hlo.splitlines():
+            if current is None:
+                m = _HEADER_RE.match(line)
+                if m:
+                    current = m.group(1)
+                    self.comps[current] = []
+                    self.shapes[current] = {
+                        pm.group(1): pm.group(2)
+                        for pm in _PARAM_RE.finditer(m.group(2))
+                    }
+            else:
+                if line.strip() == "}":
+                    current = None
+                    continue
+                self.comps[current].append(line)
+                mi = _INSTR_RE.match(line)
+                if mi:
+                    self.shapes[current][mi.group(1)] = mi.group(2)
+        self.entry = next((c for c in self.comps if "main" in c),
+                          next(iter(self.comps), None))
+
+    def trip_count(self, line: str) -> int:
+        mt = _TRIP_RE.search(line)
+        if mt:
+            return int(mt.group(1))
+        mc = _COND_RE.search(line)
+        trip = 1
+        if mc:
+            for cl in self.comps.get(mc.group(1), []):
+                for c in re.findall(r"constant\((\d+)\)", cl):
+                    trip = max(trip, int(c))
+        return trip
+
+
+def analyze_hlo(hlo: str) -> dict:
+    """Returns per-device {"flops", "hbm_bytes", "collectives": {...}}."""
+    mod = _Module(hlo)
+    flops_memo: Dict[str, float] = {}
+    bytes_memo: Dict[str, float] = {}
+    coll_memo: Dict[str, Dict[str, float]] = {}
+
+    def dot_flops(comp: str, line: str, result_shape: str) -> float:
+        _, rdims = _shape_dims(result_shape)
+        relems = 1
+        for d in rdims:
+            relems *= d
+        ops = _OPERAND_RE.findall(line[line.index("("):])
+        k = 1
+        if ops:
+            lhs_shape = mod.shapes[comp].get(ops[0], "")
+            _, ldims = _shape_dims(lhs_shape)
+            mcon = _CONTRACT_RE.search(line)
+            if mcon and ldims:
+                for d in mcon.group(1).split(","):
+                    if d:
+                        k *= ldims[int(d)]
+        return 2.0 * relems * k
+
+    def walk(comp: str, depth: int = 0) -> Tuple[float, float, Dict[str, float]]:
+        if comp in flops_memo:
+            return flops_memo[comp], bytes_memo[comp], coll_memo[comp]
+        fl, by = 0.0, 0.0
+        co = {k: 0.0 for k in _COLLECTIVES}
+        if depth > 16 or comp not in mod.comps:
+            return fl, by, co
+        flops_memo[comp], bytes_memo[comp], coll_memo[comp] = fl, by, co
+        for line in mod.comps[comp]:
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            name, shape, op = mi.groups()
+            base_op = op.replace("-start", "").replace("-done", "")
+            # ---- flops
+            if op in ("dot", "convolution"):
+                fl += dot_flops(comp, line, shape)
+            # ---- collectives (count -start once, skip -done)
+            if base_op in _COLLECTIVES and not op.endswith("-done"):
+                r = _shape_bytes(shape)
+                g = 2
+                mg = _GROUPS_RE.search(line)
+                if mg:
+                    g = max(2, len(mg.group(1).split(",")))
+                if base_op == "all-gather":
+                    co[base_op] += r * (g - 1) / g
+                elif base_op == "all-reduce":
+                    co[base_op] += 2 * r * (g - 1) / g
+                elif base_op == "reduce-scatter":
+                    co[base_op] += r * (g - 1)
+                elif base_op == "all-to-all":
+                    co[base_op] += r * (g - 1) / g
+                else:
+                    co[base_op] += r
+            # ---- HBM bytes: result + operands of top-level instructions
+            if op not in _SKIP_BYTES_OPS:
+                b = _shape_bytes(shape)
+                for opnd in _OPERAND_RE.findall(line[line.index("("):line.find(")")+1]):
+                    b += _shape_bytes(mod.shapes[comp].get(opnd, ""))
+                by += b
+            # ---- recursion
+            if op == "while":
+                mb = _BODY_RE.search(line)
+                if mb:
+                    trip = mod.trip_count(line)
+                    f2, b2, c2 = walk(mb.group(1), depth + 1)
+                    fl += f2 * trip
+                    by += b2 * trip
+                    for k, v in c2.items():
+                        co[k] += v * trip
+            elif op == "fusion":
+                mcall = _CALL_RE.search(line)
+                if mcall:  # flops only — fusion internals are not HBM traffic
+                    f2, _, c2 = walk(mcall.group(1), depth + 1)
+                    fl += f2
+                    for k, v in c2.items():
+                        co[k] += v
+            elif op in ("call", "conditional", "custom-call"):
+                for mcall in re.finditer(r"(?:calls|branch_computations=\{)%?([\w\.\-]+)",
+                                         line):
+                    f2, b2, c2 = walk(mcall.group(1), depth + 1)
+                    fl += f2
+                    by += b2
+                    for k, v in c2.items():
+                        co[k] += v
+        flops_memo[comp], bytes_memo[comp], coll_memo[comp] = fl, by, co
+        return fl, by, co
+
+    if mod.entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0,
+                "collectives": {k: 0.0 for k in _COLLECTIVES} | {"total": 0.0}}
+    fl, by, co = walk(mod.entry)
+    co = dict(co)
+    co["total"] = sum(co[k] for k in _COLLECTIVES)
+    return {"flops": fl, "hbm_bytes": by, "collectives": co}
+
+
+def parse_hlo_collectives(hlo: str) -> Dict[str, float]:
+    return analyze_hlo(hlo)["collectives"]
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HW = HW()) -> dict:
+    """Three roofline terms in seconds (everything per device).
+
+    compute = flops/peak; memory = HBM bytes/BW; collective = bytes/link BW.
+    """
+    compute_s = flops_per_dev / hw.peak_flops
+    memory_s = bytes_per_dev / hw.hbm_bw
+    collective_s = coll_bytes_per_dev / hw.ici_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

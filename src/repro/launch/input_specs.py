@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+Nothing here allocates device memory: batches, params, optimizer state and
+decode caches are all ``jax.ShapeDtypeStruct`` trees derived from the
+single-source-of-truth P-spec trees.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.models.model import Model, _VIS_DIM
+from repro.models.params import P, pspec_tree, shape_tree
+
+__all__ = ["batch_specs", "cell_struct", "supports_shape", "skip_reason"]
+
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> bool:
+    return skip_reason(cfg, shape_name) is None
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str):
+    """Assignment rules: long_500k needs a sub-quadratic memory path."""
+    if shape_name != "long_500k":
+        return None
+    sub_quadratic = (
+        cfg.family in ("ssm", "hybrid")      # state-space / hybrid
+        or cfg.sliding_window > 0            # windowed attention
+    )
+    if not sub_quadratic:
+        return (f"{cfg.name} is a pure full-attention arch: a 512k KV cache "
+                "decode step is quadratic-memory; skipped per brief "
+                "(see DESIGN.md SSArch-applicability)")
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> Tuple[dict, dict]:
+    """Returns (ShapeDtypeStruct dict, PartitionSpec dict) for the batch."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.dtype)
+    batch_ps = None  # filled by caller rules; here use logical marker
+    specs, pspecs = {}, {}
+
+    def add(name, shape, dtype, ps):
+        specs[name] = jax.ShapeDtypeStruct(shape, dtype)
+        pspecs[name] = ps
+
+    if kind == "train":
+        S_tok = S - cfg.frontend_seq if cfg.family == "vlm" else S
+        add("tokens", (B, S_tok), i32, ("batch", None))
+        add("targets", (B, S_tok), i32, ("batch", None))
+        if cfg.family == "encdec":
+            add("enc_embeds", (B, cfg.frontend_seq, _VIS_DIM), cdt,
+                ("batch", None, None))
+        if cfg.family == "vlm":
+            add("patches", (B, cfg.frontend_seq, _VIS_DIM), cdt,
+                ("batch", None, None))
+    elif kind == "prefill":
+        S_tok = S - cfg.frontend_seq if cfg.family == "vlm" else S
+        add("tokens", (B, S_tok), i32, ("batch", None))
+        if cfg.family == "encdec":
+            add("enc_embeds", (B, cfg.frontend_seq, _VIS_DIM), cdt,
+                ("batch", None, None))
+        if cfg.family == "vlm":
+            add("patches", (B, cfg.frontend_seq, _VIS_DIM), cdt,
+                ("batch", None, None))
+    else:  # decode
+        add("tokens", (B,), i32, ("batch",))
+    return specs, pspecs
+
+
+def cell_struct(cfg: ModelConfig, shape_name: str, rules: dict, mesh,
+                opt_cfg=None):
+    """Everything the dry-run needs for one cell.
+
+    Returns dict with: kind, batch (structs), in_shardings trees, params
+    struct, and for decode: cache struct; for train: opt struct.
+    """
+    from repro.train.optimizer import OptConfig, opt_param_specs
+
+    model = Model(cfg)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    B, S = sh["global_batch"], sh["seq_len"]
+
+    def ns(ps_tree):
+        return jax.tree.map(
+            lambda ps: NamedSharding(mesh, ps), ps_tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    def resolve(logical):
+        return PartitionSpec(*(rules.get(a) if a else None for a in logical))
+
+    pspecs = model.pspecs(rules)
+    params = model.param_shapes()
+    bstruct, blogical = batch_specs(cfg, shape_name)
+    bshard = {k: NamedSharding(mesh, resolve(v)) for k, v in blogical.items()}
+
+    out = dict(kind=kind, model=model, params=params,
+               params_shardings=ns(pspecs), batch=bstruct,
+               batch_shardings=bshard)
+
+    if kind == "train":
+        oc = opt_cfg or OptConfig(name=cfg.optimizer)
+        ospec = opt_param_specs(model.param_specs(), oc)
+        out["opt"] = shape_tree(ospec)
+        out["opt_shardings"] = ns(pspec_tree(ospec, rules))
+        out["opt_cfg"] = oc
+    elif kind == "decode":
+        cspec = model.cache_specs(B, S)
+        out["cache"] = shape_tree(cspec)
+        out["cache_shardings"] = ns(pspec_tree(cspec, rules))
+    elif kind == "prefill":
+        # the produced cache is an *output*: pin its sharding so the 32k
+        # KV buffers leave the step seq-sharded rather than replicated
+        cspec = model.cache_specs(B, S)
+        out["cache_shardings"] = ns(pspec_tree(cspec, rules))
+    return out

@@ -1,0 +1,162 @@
+"""Jamba-style hybrid superblock: (attn : mamba = 1 : N-1) with MoE FFNs.
+
+The layer stack is organised as homogeneous *superblocks* of
+``cfg.attn_every`` layers (Jamba: 8) so the whole stack can be scanned:
+one slot is attention, the rest are Mamba mixers, and FFNs alternate
+dense / MoE with period ``cfg.moe_every`` (Jamba: 2).  Each slot owns its
+params subtree; the outer dimension (number of superblocks) is stacked
+for ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParallelCtx, apply_norm, attention_params, mlp, mlp_params, norm_params,
+)
+from repro.models.transformer import block_decode
+from repro.models.params import P
+
+__all__ = [
+    "superblock_params", "superblock_apply", "superblock_decode",
+    "superblock_cache_specs", "attn_slot",
+]
+
+
+def attn_slot(cfg: ModelConfig) -> int:
+    return cfg.attn_every // 2
+
+
+def _slot_is_moe(cfg: ModelConfig, s: int) -> bool:
+    return cfg.n_experts > 0 and (s % cfg.moe_every == cfg.moe_every - 1)
+
+
+def superblock_params(cfg: ModelConfig) -> dict:
+    p = {}
+    for s in range(cfg.attn_every):
+        slot = {"ln1": norm_params(cfg, cfg.norm)}
+        if s == attn_slot(cfg):
+            slot["attn"] = attention_params(cfg)
+        else:
+            slot["mamba"] = mb.mamba_params(cfg)
+        slot["ln2"] = norm_params(cfg, cfg.norm)
+        slot["ffn"] = (
+            moe_mod.moe_params(cfg) if _slot_is_moe(cfg, s) else mlp_params(cfg)
+        )
+        p[f"slot{s}"] = slot
+    return p
+
+
+def superblock_apply(x, p, cfg: ModelConfig, ctx: ParallelCtx, positions,
+                     return_kv: bool = False):
+    """Full-sequence superblock. Returns (x, kv_of_attn_slot_or_None)."""
+    from repro.models.layers import attention
+
+    import jax
+
+    kv = None
+    x = ctx.shard(x, "batch", "seq_act", None)
+
+    def slot_apply(xin, slot, s):
+        h = apply_norm(xin, slot["ln1"], cfg, cfg.norm)
+        k = v = None
+        if s == attn_slot(cfg):
+            h, k, v = attention(h, slot["attn"], cfg, ctx, positions)
+        else:
+            h, _ = mb.mamba(h, slot["mamba"], cfg, ctx)
+        xin = xin + h
+        h2 = apply_norm(xin, slot["ln2"], cfg, cfg.norm)
+        if _slot_is_moe(cfg, s):
+            xin = xin + moe_mod.moe_ffn(h2, slot["ffn"], cfg, ctx)
+        else:
+            xin = xin + mlp(h2, slot["ffn"], cfg, ctx)
+        return xin, k, v
+
+    if cfg.remat != "none":
+        # nested remat: the outer scan checkpoints the superblock; the
+        # per-slot checkpoint bounds the recompute liveset to ONE slot's
+        # intermediates instead of all attn_every slots at once
+        slot_apply = jax.checkpoint(
+            slot_apply, static_argnums=(2,),
+            policy=jax.checkpoint_policies.nothing_saveable)
+    for s in range(cfg.attn_every):
+        x, k, v = slot_apply(x, p[f"slot{s}"], s)
+        if return_kv and s == attn_slot(cfg):
+            kv = (k, v)
+    return x, kv
+
+
+def superblock_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Per-superblock decode cache: attn {k,v} + per-mamba-slot states."""
+    from repro.models.transformer import attn_cache_specs
+
+    d_inner = cfg.ssm_expand * cfg.d_model
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    cache_batch_ax = "batch" if batch > 1 else None
+    specs = {}
+    for s in range(cfg.attn_every):
+        if s == attn_slot(cfg):
+            specs[f"slot{s}"] = attn_cache_specs(cfg, batch, seq_len)
+        else:
+            specs[f"slot{s}"] = {
+                "h": P((batch, d_inner, N), (cache_batch_ax, "ff", None), "zeros"),
+                "conv": P((batch, K - 1, d_inner), (cache_batch_ax, None, "ff"),
+                          "zeros", dtype=cfg.dtype),
+            }
+    return specs
+
+
+def superblock_prefill(x, p, cfg: ModelConfig, ctx: ParallelCtx, positions,
+                       to_ring, cache_dtype):
+    """Full-sequence pass that also returns the superblock's decode cache."""
+    from repro.models.layers import attention
+
+    cache = {}
+    for s in range(cfg.attn_every):
+        slot = p[f"slot{s}"]
+        h = apply_norm(x, slot["ln1"], cfg, cfg.norm)
+        if s == attn_slot(cfg):
+            h, k, v = attention(h, slot["attn"], cfg, ctx, positions)
+            cache[f"slot{s}"] = {"k": to_ring(k).astype(cache_dtype),
+                                 "v": to_ring(v).astype(cache_dtype)}
+        else:
+            h, st = mb.mamba(h, slot["mamba"], cfg, ctx)
+            cache[f"slot{s}"] = {"h": st[0], "conv": st[1].astype(cache_dtype)}
+        x = x + h
+        h2 = apply_norm(x, slot["ln2"], cfg, cfg.norm)
+        if _slot_is_moe(cfg, s):
+            x = x + moe_mod.moe_ffn(h2, slot["ffn"], cfg, ctx)
+        else:
+            x = x + mlp(h2, slot["ffn"], cfg, ctx)
+    return x, cache
+
+
+def superblock_decode(x, p, cache, slot_positions, pos, cfg: ModelConfig,
+                      ctx: ParallelCtx, seq_shard_axis=None):
+    """One-token decode through a superblock. x: [B, D]."""
+    new_cache = {}
+    for s in range(cfg.attn_every):
+        slot = p[f"slot{s}"]
+        sc = cache[f"slot{s}"]
+        if s == attn_slot(cfg):
+            x, nc = block_decode(
+                x, slot, sc, slot_positions, pos, cfg, ctx,
+                moe_layer=_slot_is_moe(cfg, s), norm_kind=cfg.norm,
+                seq_shard_axis=seq_shard_axis,
+            )
+            new_cache[f"slot{s}"] = nc
+        else:
+            h = apply_norm(x[:, None], slot["ln1"], cfg, cfg.norm)[:, 0]
+            h, st = mb.mamba_decode(h, (sc["h"], sc["conv"]), slot["mamba"],
+                                    cfg, ctx)
+            x = x + h
+            h2 = apply_norm(x[:, None], slot["ln2"], cfg, cfg.norm)
+            if _slot_is_moe(cfg, s):
+                x = x + moe_mod.moe_ffn(h2, slot["ffn"], cfg, ctx)[:, 0]
+            else:
+                x = x + mlp(h2, slot["ffn"], cfg, ctx)[:, 0]
+            new_cache[f"slot{s}"] = {"h": st[0], "conv": st[1]}
+    return x, new_cache

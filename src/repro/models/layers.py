@@ -1,0 +1,415 @@
+"""Core NN layers: norms, RoPE, GQA/SWA attention, MLPs — RAPID-aware.
+
+Every weight matmul routes through :func:`repro.core.ops.qmatmul`, so any
+layer can run with the exact MXU path or the paper's logarithmic
+multiplier; every softmax / normalisation divide can route through the
+logarithmic divider.  Layers never touch the mesh directly — they get a
+:class:`ParallelCtx` whose ``shard`` is a no-op on a single device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ApproxConfig, ModelConfig
+from repro.core import float_approx as fa
+from repro.core.ops import qmatmul
+from repro.models.params import P
+
+__all__ = [
+    "ParallelCtx",
+    "dense",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "attention_params",
+    "attention",
+    "decode_attention",
+    "mlp_params",
+    "mlp",
+    "norm_params",
+    "apply_norm",
+]
+
+# Logical -> physical axis rules (see parallel/sharding.py for the menu).
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "kv": None,
+    "vocab": "model",
+    "expert": "model",
+    "fsdp": "data",
+    "seq": None,
+}
+
+
+@dataclass
+class ParallelCtx:
+    """Mesh handle + axis rules; absent mesh means pure local execution."""
+
+    mesh: Optional[object] = None  # jax.sharding.Mesh
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def axes(self, *logical):
+        return PartitionSpec(*(self.rules.get(a) if a else None for a in logical))
+
+    def shard(self, x, *logical):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.axes(*logical))
+        )
+
+    @property
+    def data_axes(self):
+        """Mesh axes carrying the batch dimension."""
+        ax = self.rules.get("batch")
+        if ax is None:
+            return ()
+        return ax if isinstance(ax, tuple) else (ax,)
+
+
+# --------------------------------------------------------------------------
+# dense / norms / rope
+# --------------------------------------------------------------------------
+
+def dense(x, w, acfg: ApproxConfig, site: str):
+    """x @ w with optional RAPID multiplier at this site."""
+    return qmatmul(x, w, acfg.mul(site), backend=acfg.matmul_backend)
+
+
+def norm_params(cfg: ModelConfig, kind: str = "rms") -> dict:
+    p = {"scale": P((cfg.d_model,), ("embed",), "ones")}
+    if kind == "ln":
+        p["bias"] = P((cfg.d_model,), ("embed",), "zeros")
+    return p
+
+
+def rms_norm(x, params, eps: float, acfg: ApproxConfig):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    denom = jnp.sqrt(var + eps)
+    sch = acfg.div("norm")
+    if sch:
+        y = fa.approx_div(xf, denom, sch)
+    else:
+        y = xf / denom
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, params, eps: float, acfg: ApproxConfig):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    denom = jnp.sqrt(var + eps)
+    sch = acfg.div("norm")
+    if sch:
+        y = fa.approx_div(xf - mu, denom, sch)
+    else:
+        y = (xf - mu) / denom
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(x, params, cfg: ModelConfig, kind: str = "rms"):
+    if kind == "ln":
+        return layer_norm(x, params, cfg.norm_eps, cfg.approx)
+    return rms_norm(x, params, cfg.norm_eps, cfg.approx)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding, llama-style half rotation. x: [..., S, H, hd]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attention_params(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": P((D, H * hd), ("embed", "heads")),
+        "wk": P((D, KV * hd), ("embed", "kv")),
+        "wv": P((D, KV * hd), ("embed", "kv")),
+        "wo": P((H * hd, D), ("heads", "embed"), scale=1.0),
+    }
+
+
+def _online_softmax_combine(acc, l, m, acfg: ApproxConfig):
+    sch = acfg.div("softmax")
+    l = jnp.maximum(l, 1e-20)
+    if sch:
+        return fa.approx_div(acc, l[..., None], sch)
+    return acc / l[..., None]
+
+
+def _attn_blockwise(q, k, v, q_pos, kv_pos, window: int, causal: bool,
+                    acfg: ApproxConfig, chunk: int = 512):
+    """Memory-efficient attention with online softmax.
+
+    q: [B, S, KV, G, hd]; k, v: [B, T, KV, hd].  Masking from absolute
+    positions (supports causal + sliding window + cross attention).
+    Scans over KV chunks; peak memory O(S * chunk) per head group.
+    """
+    B, S, KVh, G, hd = q.shape
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    steps = (T + pad) // chunk
+    ks = k.reshape(B, steps, chunk, KVh, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, steps, chunk, KVh, hd).transpose(1, 0, 2, 3, 4)
+    kvp = kv_pos.reshape(steps, chunk)
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("bskgh,bckh->bskgc", qf, kc.astype(jnp.float32))
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= pc[None, :] <= q_pos[:, None]
+        if window:
+            mask &= pc[None, :] > (q_pos[:, None] - window)
+        mask &= (pc < jnp.iinfo(jnp.int32).max)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(jnp.isfinite(m_new)[..., None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bskgc,bckh->bskgh", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, KVh, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, KVh, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KVh, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kvp))
+    out = _online_softmax_combine(acc, l, m, acfg)
+    return out.astype(q.dtype)
+
+
+def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
+                      acfg: ApproxConfig):
+    """Scores+softmax+PV for one (pre-scaled) q chunk against full K/V."""
+    s = jnp.einsum("bshd,bthd->bhst", qc.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    mask = jnp.ones((qc.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= qp[:, None]
+    if window:
+        mask &= kv_pos[None, :] > (qp[:, None] - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    sch = acfg.div("softmax")
+    if sch:
+        m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
+        e = jnp.exp(s - m)
+        p = fa.approx_div(e, jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-20),
+                          sch)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+
+
+_Q_CHUNK = 1024
+
+
+def _attn_plain(q, k, v, q_pos, kv_pos, window: int, causal: bool,
+                acfg: ApproxConfig):
+    """Masked attention, scanned over q chunks with per-chunk remat.
+
+    q: [B,S,H,hd]; k,v: [B,T,H,hd] (heads already repeated to H and
+    sharded on the model axis).  The [B,H,chunk,T] score tensor is the
+    only quadratic-memory object; rematting each q chunk keeps backward
+    memory at O(chunk x T) per layer instead of several live O(S x T)
+    tensors (flash-attention-style, without a custom bwd)."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qs = q.astype(jnp.float32) * scale
+    if S <= _Q_CHUNK:
+        out = _attn_qchunk_core(qs, k, v, q_pos, kv_pos, window, causal, acfg)
+        return out.astype(q.dtype)
+
+    C = _Q_CHUNK
+    pad = (-S) % C
+    if pad:
+        qs = jnp.pad(qs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=0)
+    steps = (S + pad) // C
+    qcs = qs.reshape(B, steps, C, H, hd).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(steps, C)
+
+    core = jax.checkpoint(
+        lambda qc, qp: _attn_qchunk_core(qc, k, v, qp, kv_pos, window,
+                                         causal, acfg),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(_, xs):
+        qc, qp = xs
+        return None, core(qc, qp)
+
+    _, outs = jax.lax.scan(step, None, (qcs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, steps * C, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+# sequences longer than this use the O(S*chunk) blockwise path (prefill);
+# training shapes (<= 8k) use the one-shot path under layer remat.
+_PLAIN_ATTN_MAX_T = 8192
+
+
+def attention(x, params, cfg: ModelConfig, ctx: ParallelCtx, positions,
+              kv_x=None, kv_positions=None, causal: bool = True,
+              chunk: int = 1024):
+    """Full-sequence (train / prefill) GQA attention.
+
+    Returns (out [B,S,D], k [B,T,KV,hd], v) — callers keep k/v for caches.
+    ``kv_x`` switches to cross-attention (whisper decoder).
+    """
+    acfg = cfg.approx
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    T = src.shape[1]
+    kv_positions = positions if kv_positions is None else kv_positions
+
+    q = dense(x, params["wq"], acfg, "attn_proj").reshape(B, S, H, hd)
+    k = dense(src, params["wk"], acfg, "attn_proj").reshape(B, T, KV, hd)
+    v = dense(src, params["wv"], acfg, "attn_proj").reshape(B, T, KV, hd)
+    if kv_x is None:  # self attention -> rotary
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    q = ctx.shard(q, "batch", None, "heads", None)
+    k = ctx.shard(k, "batch", None, "kv", None)
+    v = ctx.shard(v, "batch", None, "kv", None)
+
+    G = H // KV
+    window = cfg.sliding_window if kv_x is None else 0
+    is_causal = causal and kv_x is None
+    if T <= _PLAIN_ATTN_MAX_T:
+        # repeat kv heads to H so the head axis shards cleanly on "model"
+        kr = ctx.shard(jnp.repeat(k, G, axis=2), "batch", None, "heads", None)
+        vr = ctx.shard(jnp.repeat(v, G, axis=2), "batch", None, "heads", None)
+        out = _attn_plain(q, kr, vr, positions, kv_positions, window,
+                          is_causal, acfg)
+    else:
+        qg = q.reshape(B, S, KV, G, hd)
+        out = _attn_blockwise(qg, k, v, positions, kv_positions, window,
+                              is_causal, acfg, chunk)
+    out = out.reshape(B, S, H * hd)
+    out = dense(out, params["wo"], acfg, "attn_proj")
+    return ctx.shard(out, "batch", "seq_act", "act_embed"), k, v
+
+
+def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
+                     acfg: ApproxConfig, ctx: Optional[ParallelCtx] = None,
+                     seq_shard_axis: Optional[str] = None):
+    """Single-token attention against a (possibly ring) KV cache.
+
+    q: [B, H, hd]; caches: [B, C, KV, hd]; slot_positions: [B, C] absolute
+    positions stored in each cache slot (MAX_INT = empty).  When
+    ``seq_shard_axis`` is given the cache length axis is sharded over that
+    mesh axis and partial softmax stats are combined with collectives
+    (flash-decode) — used by the 500k-context cells.
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, G, hd)
+
+    def local_stats(qc, kc, vc, sp):
+        s = jnp.einsum("bkgh,bckh->bkgc", qc, kc.astype(jnp.float32))
+        mask = sp <= pos
+        if window:
+            mask &= sp > pos - window
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        m = s.max(axis=-1)
+        p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("bkgc,bckh->bkgh", p, vc.astype(jnp.float32))
+        return m, l, acc
+
+    if seq_shard_axis is None:
+        m, l, acc = local_stats(qf, k_cache, v_cache, slot_positions)
+    else:
+        from jax import shard_map  # jax >= 0.8
+
+        mesh = ctx.mesh
+        batch_ax = ctx.rules.get("batch") if q.shape[0] > 1 else None
+        spec_q = PartitionSpec(batch_ax, None, None, None)
+        spec_c = PartitionSpec(batch_ax, seq_shard_axis, None, None)
+        spec_p = PartitionSpec(batch_ax, seq_shard_axis)
+        spec_s = PartitionSpec(batch_ax, None, None)
+
+        def shmap_body(qc, kc, vc, sp):
+            m, l, acc = local_stats(qc, kc, vc, sp)
+            m_g = jax.lax.pmax(m, seq_shard_axis)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+            l_g = jax.lax.psum(l * corr, seq_shard_axis)
+            acc_g = jax.lax.psum(acc * corr[..., None], seq_shard_axis)
+            return m_g, l_g, acc_g
+
+        m, l, acc = shard_map(
+            shmap_body, mesh=mesh,
+            in_specs=(spec_q, spec_c, spec_c, spec_p),
+            out_specs=(spec_s, spec_s,
+                       PartitionSpec(batch_ax, None, None, None)),
+            check_vma=False,
+        )(qf, k_cache, v_cache, slot_positions)
+
+    out = _online_softmax_combine(acc, l, m, acfg)
+    return out.reshape(B, H * hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "w1": P((D, F), ("embed", "ff")),
+            "w3": P((D, F), ("embed", "ff")),
+            "w2": P((F, D), ("ff", "embed")),
+        }
+    return {
+        "w1": P((D, F), ("embed", "ff")),
+        "w2": P((F, D), ("ff", "embed")),
+    }
+
+
+def mlp(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    acfg = cfg.approx
+    h = dense(x, params["w1"], acfg, "mlp")
+    h = ctx.shard(h, "batch", None, "ff")
+    if cfg.act == "silu":
+        h = jax.nn.silu(h) * dense(x, params["w3"], acfg, "mlp")
+    else:
+        h = jax.nn.gelu(h)
+    out = dense(h, params["w2"], acfg, "mlp")
+    return ctx.shard(out, "batch", "seq_act", "act_embed")

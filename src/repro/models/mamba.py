@@ -1,0 +1,168 @@
+"""Mamba (selective SSM) block — the recurrent half of the Jamba hybrid.
+
+Training/prefill use a chunked associative scan (TPU-friendly: intra-chunk
+work is dense VPU/MXU math on [B, chunk, d_inner, N] tiles, inter-chunk
+state is carried by a short ``lax.scan``).  Decode is the O(1) recurrent
+update.  ``d_inner`` is sharded on the model axis ("ff" logical axis) —
+the SSM state never crosses devices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParallelCtx, dense
+from repro.models.params import P
+
+__all__ = ["mamba_params", "mamba", "mamba_decode", "mamba_init_cache"]
+
+_CHUNK = 32
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba_params(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_inner, dt_rank = _dims(cfg)
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "in_proj": P((D, 2 * d_inner), ("embed", "ff")),
+        "conv_w": P((K, d_inner), (None, "ff"), "normal", 0.5),
+        "conv_b": P((d_inner,), ("ff",), "zeros"),
+        "x_proj": P((d_inner, dt_rank + 2 * N), ("ff", None)),
+        "dt_proj": P((dt_rank, d_inner), (None, "ff"), "small"),
+        "dt_bias": P((d_inner,), ("ff",), "ones"),
+        "a_log": P((d_inner, N), ("ff", None), "zeros"),
+        "d_skip": P((d_inner,), ("ff",), "ones"),
+        "out_proj": P((d_inner, D), ("ff", "embed")),
+    }
+
+
+def _ssm_inputs(x_in, params, cfg: ModelConfig):
+    """Common pre-scan computation. x_in: [..., d_inner] (post conv+silu)."""
+    _, dt_rank = _dims(cfg)
+    N = cfg.ssm_state
+    xdbc = jnp.einsum("...i,ij->...j", x_in.astype(jnp.float32),
+                      params["x_proj"].astype(jnp.float32))
+    dt_r, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_r, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"].astype(jnp.float32)
+    )  # [..., d_inner]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [d_inner, N]
+    return dt, A, Bm, Cm
+
+
+def _conv_causal(x, w, b, state=None):
+    """Depthwise causal conv along S. x: [B,S,C]; w: [K,C]; state: [B,K-1,C]."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :], xp[:, -(K - 1) :, :]
+
+
+def mamba(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """Train/prefill forward. x: [B, S, D] -> ([B, S, D], final_state)."""
+    B, S, D = x.shape
+    d_inner, _ = _dims(cfg)
+    N = cfg.ssm_state
+    acfg = cfg.approx
+
+    xz = dense(x, params["in_proj"], acfg, "mlp")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = ctx.shard(x_in, "batch", None, "ff")
+    x_in, conv_state = _conv_causal(
+        x_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)
+    )
+    x_in = jax.nn.silu(x_in)
+
+    dt, A, Bm, Cm = _ssm_inputs(x_in, params, cfg)
+    xf = x_in.astype(jnp.float32)
+
+    # chunked associative scan over S.  Discretisation (exp(dt*A), dt*B*x)
+    # happens INSIDE the chunk step: materialising it for the full
+    # sequence would cost O(S*d_inner*N) f32 per layer (hundreds of GiB at
+    # Jamba scale) and, saved under the remat scan, dominated device
+    # memory; per-chunk it is O(chunk*d_inner*N) and recomputed in bwd.
+    C_ = min(_CHUNK, S)
+    pad = (-S) % C_
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    steps = (S + pad) // C_
+
+    def chunk(t):  # [B,S',...] -> [steps, B, C_, ...]
+        return t.reshape(B, steps, C_, -1).transpose(1, 0, 2, 3)
+
+    dts, Bs, Cs, xs = chunk(dt), chunk(Bm), chunk(Cm), chunk(xf)
+
+    def chunk_step(h, inp):
+        dtc, bc, cc, xc = inp  # [B,C,di], [B,C,N], [B,C,N], [B,C,di]
+        da = jnp.exp(dtc[..., None] * A[None, None])        # [B,C,di,N]
+        dbx = (dtc * xc)[..., None] * bc[:, :, None, :]
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        aa, bb = jax.lax.associative_scan(op, (da, dbx), axis=1)
+        hs = aa * h[:, None] + bb                           # [B,C,di,N]
+        y = jnp.einsum("bcin,bcn->bci", hs, cc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    # remat the chunk body: the inner scan otherwise stacks the full
+    # [steps, B, C, d_inner, N] state history for its backward pass
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                              (dts, Bs, Cs, xs))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, steps * C_, d_inner)[:, :S]
+
+    y = y + params["d_skip"].astype(jnp.float32) * xf[:, :S]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, params["out_proj"], acfg, "mlp")
+    return ctx.shard(out, "batch", "seq_act", "act_embed"), (h_last, conv_state)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, _ = _dims(cfg)
+    return (
+        jnp.zeros((batch, d_inner, cfg.ssm_state), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+    )
+
+
+def mamba_decode(x, cache, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """Single-token step. x: [B, D]; cache: (h [B,di,N], conv [B,K-1,di])."""
+    B, D = x.shape
+    acfg = cfg.approx
+    h, conv_state = cache
+
+    xz = dense(x[:, None, :], params["in_proj"], acfg, "mlp")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in, conv_state = _conv_causal(
+        x_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        state=conv_state,
+    )
+    x_in = jax.nn.silu(x_in)[:, 0]  # [B, di]
+    z = z[:, 0]
+
+    dt, A, Bm, Cm = _ssm_inputs(x_in, params, cfg)
+    xf = x_in.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A[None])                   # [B,di,N]
+    h = dA * h + (dt * xf)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, Cm)
+    y = y + params["d_skip"].astype(jnp.float32) * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y[:, None, :], params["out_proj"], acfg, "mlp")[:, 0]
+    return out, (h, conv_state)

@@ -1,0 +1,548 @@
+"""Unified model API over all assigned architecture families.
+
+``Model(cfg)`` exposes:
+
+  * ``param_specs()`` / ``init(rng)`` / ``pspecs(rules)`` — one source of
+    truth for shapes, init and shardings (see models/params.py);
+  * ``loss_fn(params, batch, ctx)``   — training objective (causal CE);
+  * ``forward(params, batch, ctx)``   — full-sequence logits;
+  * ``prefill(params, batch, ctx, cache_len)`` — logits for the last
+    position + a filled decode cache;
+  * ``decode_step(params, tokens, cache, ctx)`` — one-token serve step;
+  * ``cache_specs(batch, cache_len)`` — decode-cache spec tree (dry-run).
+
+Families: dense / moe / vlm (decoder LM), hybrid (Jamba), ssm (xLSTM),
+encdec (Whisper backbone).  Frontends (audio frames / vision patches) are
+stubs per the assignment: batches carry precomputed embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as hy
+from repro.models import xlstm as xl
+from repro.models.layers import ParallelCtx, apply_norm, dense, norm_params
+from repro.models.params import P, materialize, pspec_tree, shape_tree
+from repro.models.transformer import (
+    attn_cache_specs,
+    block_apply,
+    block_decode,
+    block_params,
+)
+
+__all__ = ["Model"]
+
+_VIS_DIM = 1024  # stub vision/audio frontend embedding width
+_MAXI32 = 2**31 - 1
+
+
+def _stack(tree, n: int):
+    """Add a leading stacked-layer dim to every P leaf."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (None,) + p.axes, p.init, p.scale, p.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _tree_at(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.padded_vocab
+        specs: dict = {
+            "embed": P((V, D), ("vocab", "embed"), "small"),
+            "final_norm": norm_params(cfg, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P((D, V), ("embed", "vocab"))
+
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            blk = block_params(cfg, moe_layer=cfg.n_experts > 0,
+                               norm_kind=cfg.norm)
+            specs["blocks"] = (
+                _stack(blk, cfg.n_layers)
+                if cfg.scan_layers
+                else {f"l{i}": block_params(cfg, cfg.n_experts > 0, cfg.norm)
+                      for i in range(cfg.n_layers)}
+            )
+        elif fam == "hybrid":
+            n_super = cfg.n_layers // cfg.attn_every
+            sb = hy.superblock_params(cfg)
+            specs["blocks"] = _stack(sb, n_super) if cfg.scan_layers else {
+                f"l{i}": hy.superblock_params(cfg) for i in range(n_super)
+            }
+        elif fam == "ssm":
+            blocks = {}
+            for i in range(cfg.n_layers):
+                kind = "slstm" if i in cfg.slstm_at else "mlstm"
+                blocks[f"l{i}"] = {
+                    "ln": norm_params(cfg, cfg.norm),
+                    "kind": kind,  # consumed below, stripped from tree
+                }
+                blocks[f"l{i}"][kind] = (
+                    xl.slstm_params(cfg) if kind == "slstm" else xl.mlstm_params(cfg)
+                )
+            specs["blocks"] = {
+                k: {kk: vv for kk, vv in v.items() if kk != "kind"}
+                for k, v in blocks.items()
+            }
+        elif fam == "encdec":
+            specs["adapter"] = P((_VIS_DIM, D), (None, "embed"))
+            specs["enc_pos"] = P((cfg.frontend_seq, D), (None, "embed"), "small")
+            specs["enc_final_norm"] = norm_params(cfg, cfg.norm)
+            eb = block_params(cfg, norm_kind=cfg.norm)
+            specs["enc_blocks"] = (
+                _stack(eb, cfg.n_encoder_layers)
+                if cfg.scan_layers
+                else {f"l{i}": block_params(cfg, norm_kind=cfg.norm)
+                      for i in range(cfg.n_encoder_layers)}
+            )
+            db = block_params(cfg, norm_kind=cfg.norm, cross=True)
+            specs["blocks"] = (
+                _stack(db, cfg.n_layers)
+                if cfg.scan_layers
+                else {f"l{i}": block_params(cfg, norm_kind=cfg.norm, cross=True)
+                      for i in range(cfg.n_layers)}
+            )
+        else:
+            raise ValueError(f"unknown family {fam}")
+
+        if fam == "vlm":
+            specs["projector"] = {
+                "w1": P((_VIS_DIM, D), (None, "embed")),
+                "w2": P((D, D), ("embed", "embed2")),
+            }
+        return specs
+
+    def init(self, rng):
+        return materialize(self.param_specs(), rng, self.cfg.param_dtype)
+
+    def param_shapes(self):
+        return shape_tree(self.param_specs(), self.cfg.param_dtype)
+
+    def pspecs(self, rules: dict):
+        return pspec_tree(self.param_specs(), rules)
+
+    # ------------------------------------------------------------------
+    # embedding / head helpers
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        emb = params["embed"]
+        x = jnp.take(emb, tokens, axis=0).astype(jnp.dtype(self.cfg.dtype))
+        return x
+
+    def _logits(self, params, x, ctx: ParallelCtx):
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        out = dense(x, head.astype(x.dtype), cfg.approx, "logits")
+        return ctx.shard(out.astype(jnp.float32), "batch", None, "vocab")
+
+    def _xlstm_kinds(self):
+        return ["slstm" if i in self.cfg.slstm_at else "mlstm"
+                for i in range(self.cfg.n_layers)]
+
+    def _encode(self, params, enc_embeds, ctx):
+        """Whisper-style encoder over precomputed frontend embeddings."""
+        cfg = self.cfg
+        x = jnp.einsum("bse,ed->bsd", enc_embeds.astype(jnp.float32),
+                       params["adapter"].astype(jnp.float32))
+        x = (x + params["enc_pos"].astype(jnp.float32)[None]).astype(
+            jnp.dtype(cfg.dtype))
+        x = ctx.shard(x, "batch", None, "act_embed")
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(h, lp):
+            h, _ = block_apply(h, lp, cfg, ctx, pos, norm_kind=cfg.norm,
+                               causal=False)
+            return h, None
+
+        x = self._run_stack(params["enc_blocks"], cfg.n_encoder_layers, body, x)
+        return apply_norm(x, params["enc_final_norm"], cfg, cfg.norm)
+
+    def _layer_constrainer(self, ctx: ParallelCtx, key: str = "blocks"):
+        """Constrain a scanned layer's sliced params to their shardings.
+
+        The backward of a scanned stack accumulates weight gradients into
+        stacked buffers; without an in-body anchor GSPMD can leave those
+        accumulators fully replicated (9 GiB+ per leaf at Jamba scale).
+        Constraining the sliced primal inside the body pins the cotangent
+        layout too.
+        """
+        if ctx.mesh is None or not self.cfg.scan_layers:
+            return lambda lp: lp
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        stacked = pspec_tree(self.param_specs()[key], ctx.rules)
+        layer_ps = jax.tree.map(
+            lambda ps: PartitionSpec(*ps[1:]), stacked,
+            is_leaf=lambda v: isinstance(v, PartitionSpec))
+
+        def constrain(lp):
+            return jax.tree.map(
+                lambda a, ps: jax.lax.with_sharding_constraint(
+                    a, NamedSharding(ctx.mesh, ps)), lp, layer_ps)
+
+        return constrain
+
+    def _run_stack(self, blocks, n, body, x, remat: Optional[bool] = None):
+        """Scan or unrolled loop over a homogeneous stacked block tree."""
+        cfg = self.cfg
+        f = body
+        if remat is None:
+            remat = cfg.remat != "none"
+        if remat:
+            f = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.nothing_saveable
+                if cfg.remat == "block"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(f, x, blocks)
+            return x
+        for i in range(n):
+            x, _ = f(x, blocks[f"l{i}"])
+        return x
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (training / eval)
+    # ------------------------------------------------------------------
+    def forward(self, params, batch, ctx: ParallelCtx):
+        cfg = self.cfg
+        fam = cfg.family
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+
+        enc_out = None
+        if fam == "vlm":
+            pr = params["projector"]
+            p = jax.nn.gelu(jnp.einsum(
+                "bpe,ed->bpd", batch["patches"].astype(jnp.float32),
+                pr["w1"].astype(jnp.float32)))
+            p = jnp.einsum("bpd,de->bpe", p, pr["w2"].astype(jnp.float32))
+            x = jnp.concatenate([p.astype(x.dtype), x], axis=1)
+        elif fam == "encdec":
+            enc_out = self._encode(params, batch["enc_embeds"], ctx)
+
+        x = ctx.shard(x, "batch", None, "act_embed")
+        T = x.shape[1]
+        pos = jnp.arange(T, dtype=jnp.int32)
+        enc_pos = (jnp.arange(cfg.frontend_seq, dtype=jnp.int32)
+                   if enc_out is not None else None)
+
+        anchor = self._layer_constrainer(ctx)
+        if fam in ("dense", "moe", "vlm"):
+            def body(h, lp):
+                h, _ = block_apply(h, anchor(lp), cfg, ctx, pos,
+                                   moe_layer=cfg.n_experts > 0,
+                                   norm_kind=cfg.norm)
+                return h, None
+            x = self._run_stack(params["blocks"], cfg.n_layers, body, x)
+        elif fam == "encdec":
+            def body(h, lp):
+                h, _ = block_apply(h, anchor(lp), cfg, ctx, pos,
+                                   norm_kind=cfg.norm,
+                                   enc_out=enc_out, enc_positions=enc_pos)
+                return h, None
+            x = self._run_stack(params["blocks"], cfg.n_layers, body, x)
+        elif fam == "hybrid":
+            def body(h, lp):
+                h, _ = hy.superblock_apply(h, anchor(lp), cfg, ctx, pos)
+                return h, None
+            x = self._run_stack(params["blocks"],
+                                cfg.n_layers // cfg.attn_every, body, x)
+        elif fam == "ssm":
+            kinds = self._xlstm_kinds()
+
+            def ssm_block(h_in, lp, kind):
+                h = apply_norm(h_in, lp["ln"], cfg, cfg.norm)
+                if kind == "slstm":
+                    h, _ = xl.slstm(h, lp["slstm"], cfg, ctx)
+                else:
+                    h, _ = xl.mlstm(h, lp["mlstm"], cfg, ctx)
+                return h_in + h
+
+            if cfg.remat != "none":
+                ssm_block = jax.checkpoint(
+                    ssm_block, static_argnums=(2,),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            for i, kind in enumerate(kinds):
+                x = ssm_block(x, params["blocks"][f"l{i}"], kind)
+
+        x = apply_norm(x, params["final_norm"], cfg, cfg.norm)
+        return self._logits(params, x, ctx)
+
+    def loss_fn(self, params, batch, ctx: ParallelCtx):
+        """Mean next-token CE over positions with target >= 0."""
+        logits = self.forward(params, batch, ctx)
+        tgt = batch["targets"]
+        # align: logits predict the *next* token at each position
+        logits = logits[:, -tgt.shape[1]:]  # drop patch positions (vlm)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(tgt, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - picked
+        mask = (tgt >= 0).astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch: int, cache_n: int) -> dict:
+        """Decode-cache spec tree for a cache of ``cache_n`` slots."""
+        cfg = self.cfg
+        fam = cfg.family
+        C = min(cache_n, cfg.sliding_window) if cfg.sliding_window else cache_n
+        cache_batch_ax = "batch" if batch > 1 else None
+        specs: dict = {
+            "pos": P((), (), "zeros", dtype="int32"),
+            "slots": P((batch, C), (cache_batch_ax, "seq"),
+                       "fill", _MAXI32, dtype="int32"),
+        }
+        if fam in ("dense", "moe", "vlm"):
+            lc = attn_cache_specs(cfg, batch, cache_n)
+            specs["layers"] = _stack(lc, cfg.n_layers) if cfg.scan_layers else {
+                f"l{i}": attn_cache_specs(cfg, batch, cache_n)
+                for i in range(cfg.n_layers)
+            }
+        elif fam == "encdec":
+            lc = attn_cache_specs(cfg, batch, cache_n,
+                                  cross_len=cfg.frontend_seq)
+            specs["layers"] = _stack(lc, cfg.n_layers) if cfg.scan_layers else {
+                f"l{i}": attn_cache_specs(cfg, batch, cache_n, cfg.frontend_seq)
+                for i in range(cfg.n_layers)
+            }
+        elif fam == "hybrid":
+            sb = hy.superblock_cache_specs(cfg, batch, cache_n)
+            n_super = cfg.n_layers // cfg.attn_every
+            specs["layers"] = _stack(sb, n_super) if cfg.scan_layers else {
+                f"l{i}": hy.superblock_cache_specs(cfg, batch, cache_n)
+                for i in range(n_super)
+            }
+        elif fam == "ssm":
+            layers = {}
+            for i, kind in enumerate(self._xlstm_kinds()):
+                H, hd = cfg.n_heads, cfg.hd
+                if kind == "mlstm":
+                    from repro.models.xlstm import mlstm_dims
+                    _, hd = mlstm_dims(cfg)
+                    # head counts are small (4); shard the per-head state
+                    # dims on the model axis instead
+                    layers[f"l{i}"] = {
+                        "C": P((batch, H, hd, hd), (cache_batch_ax, None, None, "ff"), "zeros"),
+                        "n": P((batch, H, hd), (cache_batch_ax, None, "ff"), "zeros"),
+                        "m": P((batch, H), (cache_batch_ax, None), "fill", -1e30),
+                    }
+                else:
+                    layers[f"l{i}"] = {
+                        "c": P((batch, H, hd), (cache_batch_ax, None, "ff"), "zeros"),
+                        "n": P((batch, H, hd), (cache_batch_ax, None, "ff"), "zeros"),
+                        "m": P((batch, H, hd), (cache_batch_ax, None, "ff"), "fill", -1e30),
+                        "h": P((batch, H, hd), (cache_batch_ax, None, "ff"), "zeros"),
+                    }
+            specs["layers"] = layers
+            specs.pop("slots")
+        return specs
+
+    def init_cache(self, batch: int, cache_n: int):
+        return materialize(self.cache_specs(batch, cache_n),
+                           jax.random.PRNGKey(0), "float32")
+
+    def decode_step(self, params, tokens, cache, ctx: ParallelCtx,
+                    seq_shard_axis: Optional[str] = None):
+        """tokens: [B] int32 -> (logits [B, V], new cache)."""
+        cfg = self.cfg
+        fam = cfg.family
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = self._embed(params, tokens[:, None])[:, 0]
+        x = ctx.shard(x, "batch", "act_embed")
+
+        new_cache = dict(cache)
+        if "slots" in cache:
+            C = cache["slots"].shape[1]
+            write = pos % C
+            slots = jax.lax.dynamic_update_slice(
+                cache["slots"], jnp.full((B, 1), pos, jnp.int32), (0, write))
+            new_cache["slots"] = slots
+        else:
+            slots = None
+
+        if fam in ("dense", "moe", "vlm", "encdec"):
+            def body(h, xs):
+                lp, lc = xs
+                h, nc = block_decode(h, lp, lc, slots, pos, cfg, ctx,
+                                     moe_layer=cfg.n_experts > 0,
+                                     norm_kind=cfg.norm,
+                                     seq_shard_axis=seq_shard_axis)
+                return h, nc
+            if cfg.scan_layers:
+                x, ncl = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+            else:
+                ncl = {}
+                for i in range(cfg.n_layers):
+                    x, ncl[f"l{i}"] = body(x, (params["blocks"][f"l{i}"],
+                                               cache["layers"][f"l{i}"]))
+            new_cache["layers"] = ncl
+        elif fam == "hybrid":
+            def body(h, xs):
+                lp, lc = xs
+                h, nc = hy.superblock_decode(h, lp, lc, slots, pos, cfg, ctx,
+                                             seq_shard_axis)
+                return h, nc
+            n_super = cfg.n_layers // cfg.attn_every
+            if cfg.scan_layers:
+                x, ncl = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+            else:
+                ncl = {}
+                for i in range(n_super):
+                    x, ncl[f"l{i}"] = body(x, (params["blocks"][f"l{i}"],
+                                               cache["layers"][f"l{i}"]))
+            new_cache["layers"] = ncl
+        elif fam == "ssm":
+            ncl = {}
+            for i, kind in enumerate(self._xlstm_kinds()):
+                lp = params["blocks"][f"l{i}"]
+                lc = cache["layers"][f"l{i}"]
+                h = apply_norm(x[:, None], lp["ln"], cfg, cfg.norm)[:, 0]
+                if kind == "slstm":
+                    h, st = xl.slstm_decode(h, (lc["c"], lc["n"], lc["m"], lc["h"]),
+                                            lp["slstm"], cfg, ctx)
+                    ncl[f"l{i}"] = dict(zip(("c", "n", "m", "h"), st))
+                else:
+                    h, st = xl.mlstm_decode(h, (lc["C"], lc["n"], lc["m"]),
+                                            lp["mlstm"], cfg, ctx)
+                    ncl[f"l{i}"] = dict(zip(("C", "n", "m"), st))
+                x = x + h
+            new_cache["layers"] = ncl
+
+        new_cache["pos"] = pos + 1
+        x = apply_norm(x[:, None], params["final_norm"], cfg, cfg.norm)
+        logits = self._logits(params, x, ctx)[:, 0]
+        return logits, new_cache
+
+    def prefill(self, params, batch, ctx: ParallelCtx, cache_n: int):
+        """Full-sequence forward that also fills a decode cache.
+
+        Returns (last-position logits [B, V], cache).  Implemented as the
+        train-style forward plus cache extraction; attention k/v are
+        scattered into (ring) cache buffers.
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if fam == "vlm":
+            pr = params["projector"]
+            p = jax.nn.gelu(jnp.einsum(
+                "bpe,ed->bpd", batch["patches"].astype(jnp.float32),
+                pr["w1"].astype(jnp.float32)))
+            p = jnp.einsum("bpd,de->bpe", p, pr["w2"].astype(jnp.float32))
+            x = jnp.concatenate([p.astype(x.dtype), x], axis=1)
+            S = x.shape[1]
+        x = ctx.shard(x, "batch", None, "act_embed")
+        pos = jnp.arange(S, dtype=jnp.int32)
+        C = min(cache_n, cfg.sliding_window) if cfg.sliding_window else cache_n
+
+        def to_ring(kv):  # [B, S, KV, hd] -> [B, C, KV, hd] (+slot positions)
+            if C >= S:
+                padded = jnp.pad(kv, ((0, 0), (0, C - S), (0, 0), (0, 0)))
+                return padded
+            tail = kv[:, S - C:]
+            idx = (jnp.arange(C) + (S - C)) % C
+            return jnp.zeros((B, C) + kv.shape[2:], kv.dtype).at[:, idx].set(tail)
+
+        def slot_positions():
+            if C >= S:
+                base = jnp.where(jnp.arange(C) < S, jnp.arange(C), _MAXI32)
+            else:
+                idx = (jnp.arange(C) + (S - C)) % C
+                base = jnp.zeros((C,), jnp.int32).at[idx].set(
+                    jnp.arange(S - C, S, dtype=jnp.int32))
+            return jnp.broadcast_to(base, (B, C)).astype(jnp.int32)
+
+        enc_out = None
+        if fam == "encdec":
+            enc_out = self._encode(params, batch["enc_embeds"], ctx)
+        enc_pos = (jnp.arange(cfg.frontend_seq, dtype=jnp.int32)
+                   if enc_out is not None else None)
+
+        cache: dict = {"pos": jnp.int32(S)}
+        if fam != "ssm":
+            cache["slots"] = slot_positions()
+
+        if fam in ("dense", "moe", "vlm", "encdec"):
+            def body(h, lp):
+                h, kv = block_apply(h, lp, cfg, ctx, pos,
+                                    moe_layer=cfg.n_experts > 0,
+                                    norm_kind=cfg.norm, enc_out=enc_out,
+                                    enc_positions=enc_pos, return_kv=True)
+                k, v = kv
+                lc = {"k": to_ring(k).astype(jnp.dtype(cfg.dtype)),
+                      "v": to_ring(v).astype(jnp.dtype(cfg.dtype))}
+                if enc_out is not None:
+                    acfg = cfg.approx
+                    KV, hd = cfg.n_kv_heads, cfg.hd
+                    Tc = enc_out.shape[1]
+                    lc["ck"] = dense(enc_out, lp["xattn"]["wk"], acfg,
+                                     "attn_proj").reshape(B, Tc, KV, hd).astype(
+                                         jnp.dtype(cfg.dtype))
+                    lc["cv"] = dense(enc_out, lp["xattn"]["wv"], acfg,
+                                     "attn_proj").reshape(B, Tc, KV, hd).astype(
+                                         jnp.dtype(cfg.dtype))
+                return h, lc
+            if cfg.scan_layers:
+                x, layers = jax.lax.scan(body, x, params["blocks"])
+            else:
+                layers = {}
+                for i in range(cfg.n_layers):
+                    x, layers[f"l{i}"] = body(x, params["blocks"][f"l{i}"])
+            cache["layers"] = layers
+        elif fam == "hybrid":
+            def body(h, lp):
+                h, lc = hy.superblock_prefill(h, lp, cfg, ctx, pos, to_ring,
+                                              jnp.dtype(cfg.dtype))
+                return h, lc
+            n_super = cfg.n_layers // cfg.attn_every
+            if cfg.scan_layers:
+                x, layers = jax.lax.scan(body, x, params["blocks"])
+            else:
+                layers = {}
+                for i in range(n_super):
+                    x, layers[f"l{i}"] = body(x, params["blocks"][f"l{i}"])
+            cache["layers"] = layers
+        elif fam == "ssm":
+            layers = {}
+            for i, kind in enumerate(self._xlstm_kinds()):
+                lp = params["blocks"][f"l{i}"]
+                h = apply_norm(x, lp["ln"], cfg, cfg.norm)
+                if kind == "slstm":
+                    h, st = xl.slstm(h, lp["slstm"], cfg, ctx)
+                    layers[f"l{i}"] = dict(zip(("c", "n", "m", "h"), st))
+                else:
+                    h, st = xl.mlstm(h, lp["mlstm"], cfg, ctx)
+                    layers[f"l{i}"] = dict(zip(("C", "n", "m"), st))
+                x = x + h
+            cache["layers"] = layers
+
+        x = apply_norm(x[:, -1:], params["final_norm"], cfg, cfg.norm)
+        logits = self._logits(params, x, ctx)[:, 0]
+        return logits, cache

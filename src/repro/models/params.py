@@ -1,0 +1,94 @@
+"""Parameter-tree machinery: one source of truth for shapes, shardings, init.
+
+A model is described as a pytree whose leaves are :class:`P` specs
+(shape + logical axis names + init rule).  From that single tree we derive
+
+  * real initialised parameters (smoke tests, examples, training),
+  * ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod dry-run),
+  * ``jax.sharding.PartitionSpec`` trees (pjit in/out shardings),
+
+so shapes and shardings can never drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+__all__ = ["P", "materialize", "shape_tree", "pspec_tree", "count_params"]
+
+
+@dataclass(frozen=True)
+class P:
+    """Leaf spec: shape, logical axes (one name or None per dim), init."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def materialize(tree, rng: jax.Array, param_dtype: str = "float32"):
+    """Initialise real parameters for a spec tree."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_leaf)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, keys):
+        dt = jnp.dtype(spec.dtype) if spec.dtype != "float32" else jnp.dtype(param_dtype)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        elif spec.init == "fill":
+            arr = jnp.full(spec.shape, spec.scale, dt)
+        elif spec.init == "arange":
+            arr = jnp.broadcast_to(jnp.arange(spec.shape[-1], dtype=dt), spec.shape)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+            if spec.init == "small":
+                std = 0.02
+            else:
+                std = spec.scale / np.sqrt(fan_in)
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(tree, param_dtype: str = "float32"):
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+
+    def one(s: P):
+        dt = jnp.dtype(s.dtype) if s.dtype != "float32" else jnp.dtype(param_dtype)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree.map(one, tree, is_leaf=_is_leaf)
+
+
+def pspec_tree(tree, rules: dict):
+    """PartitionSpec tree via logical->physical axis rules.
+
+    ``rules`` maps a logical axis name to a mesh axis (or tuple of axes or
+    None).  Unknown logical names map to None (replicated).
+    """
+
+    def one(spec: P) -> PartitionSpec:
+        return PartitionSpec(*(rules.get(a) for a in spec.axes))
+
+    return jax.tree.map(one, tree, is_leaf=_is_leaf)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_leaf)
+    return int(sum(np.prod(l.shape) for l in leaves))

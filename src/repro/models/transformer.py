@@ -1,0 +1,156 @@
+"""Decoder transformer block (dense or MoE FFN) + KV-cache decode step."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParallelCtx,
+    apply_norm,
+    attention_params,
+    decode_attention,
+    dense,
+    mlp,
+    mlp_params,
+    norm_params,
+    rope,
+)
+from repro.models.params import P
+
+__all__ = [
+    "block_params",
+    "block_apply",
+    "block_decode",
+    "attn_cache_specs",
+    "cross_attention_block",
+]
+
+
+def block_params(cfg: ModelConfig, moe_layer: bool = False,
+                 norm_kind: str = "rms", cross: bool = False) -> dict:
+    p = {
+        "ln1": norm_params(cfg, norm_kind),
+        "attn": attention_params(cfg),
+        "ln2": norm_params(cfg, norm_kind),
+    }
+    if cross:
+        p["lnx"] = norm_params(cfg, norm_kind)
+        p["xattn"] = attention_params(cfg, cross=True)
+    p["ffn"] = moe_mod.moe_params(cfg) if moe_layer else mlp_params(cfg)
+    return p
+
+
+def _ffn(x, p, cfg, ctx, moe_layer):
+    if moe_layer:
+        return moe_mod.moe_ffn(x, p["ffn"], cfg, ctx)
+    return mlp(x, p["ffn"], cfg, ctx)
+
+
+def block_apply(x, p, cfg: ModelConfig, ctx: ParallelCtx, positions,
+                moe_layer: bool = False, norm_kind: str = "rms",
+                enc_out=None, enc_positions=None, causal: bool = True,
+                return_kv: bool = False):
+    """Full-sequence block. Returns (x, kv) where kv=(k, v) if requested."""
+    from repro.models.layers import attention
+
+    x = ctx.shard(x, "batch", "seq_act", None)
+    h, k, v = attention(
+        apply_norm(x, p["ln1"], cfg, norm_kind), p["attn"], cfg, ctx, positions,
+        causal=causal,
+    )
+    x = x + h
+    if enc_out is not None:
+        hx, _, _ = attention(
+            apply_norm(x, p["lnx"], cfg, norm_kind), p["xattn"], cfg, ctx,
+            positions, kv_x=enc_out, kv_positions=enc_positions, causal=False,
+        )
+        x = x + hx
+    x = x + _ffn(apply_norm(x, p["ln2"], cfg, norm_kind), p, cfg, ctx, moe_layer)
+    return (x, (k, v)) if return_kv else (x, None)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def attn_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                     cross_len: int = 0) -> dict:
+    """P-spec tree for one layer's attention cache."""
+    C = cache_len(cfg, seq_len)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    cache_batch_ax = "batch" if batch > 1 else None
+    # cache length always carries the "seq" logical axis: kv-head counts
+    # (4..36) can never shard a 16-way axis, the 32k length always can
+    seq_ax = "seq"
+    p = {
+        "k": P((batch, C, KV, hd), (cache_batch_ax, seq_ax, "kv", None),
+               "zeros", dtype=dt),
+        "v": P((batch, C, KV, hd), (cache_batch_ax, seq_ax, "kv", None),
+               "zeros", dtype=dt),
+    }
+    if cross_len:
+        p["ck"] = P((batch, cross_len, KV, hd), (cache_batch_ax, None, "kv", None),
+                    "zeros", dtype=dt)
+        p["cv"] = P((batch, cross_len, KV, hd), (cache_batch_ax, None, "kv", None),
+                    "zeros", dtype=dt)
+    return p
+
+
+def block_decode(x, p, cache, slot_positions, pos, cfg: ModelConfig,
+                 ctx: ParallelCtx, moe_layer: bool = False,
+                 norm_kind: str = "rms", enc_positions=None,
+                 seq_shard_axis: Optional[str] = None):
+    """One-token decode. x: [B, D]; cache: {"k","v"[,ck,cv]}; pos scalar."""
+    acfg = cfg.approx
+    B, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    C = cache["k"].shape[1]
+
+    h = apply_norm(x[:, None], p["ln1"], cfg, norm_kind)
+    q = dense(h, p["attn"]["wq"], acfg, "attn_proj").reshape(B, H, hd)
+    k = dense(h, p["attn"]["wk"], acfg, "attn_proj").reshape(B, KV, hd)
+    v = dense(h, p["attn"]["wv"], acfg, "attn_proj").reshape(B, KV, hd)
+    posv = jnp.full((B,), pos, jnp.int32)
+    q = rope(q[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+    k = rope(k[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+
+    write = pos % C  # ring write for sliding-window caches
+    ck = jax.lax.dynamic_update_slice(cache["k"], k[:, None].astype(cache["k"].dtype),
+                                      (0, write, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v[:, None].astype(cache["v"].dtype),
+                                      (0, write, 0, 0))
+    attn_out = decode_attention(
+        q, ck, cv, slot_positions, pos, cfg.sliding_window, acfg, ctx,
+        seq_shard_axis,
+    )
+    x = x + dense(attn_out[:, None], p["attn"]["wo"], acfg, "attn_proj")[:, 0]
+
+    if "ck" in cache:  # cross attention (enc-dec decode)
+        hx = apply_norm(x[:, None], p["lnx"], cfg, norm_kind)
+        qx = dense(hx, p["xattn"]["wq"], acfg, "attn_proj").reshape(B, H, hd)
+        Tc = cache["ck"].shape[1]
+        xo = decode_attention(
+            qx, cache["ck"], cache["cv"],
+            jnp.broadcast_to(jnp.arange(Tc, dtype=jnp.int32), (B, Tc)),
+            jnp.int32(2**30), 0, acfg, ctx, None,
+        )
+        x = x + dense(xo[:, None], p["xattn"]["wo"], acfg, "attn_proj")[:, 0]
+
+    h2 = apply_norm(x[:, None], p["ln2"], cfg, norm_kind)
+    x = x + _ffn(h2, p, cfg, ctx, moe_layer)[:, 0]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return x, new_cache
+
+
+def cross_attention_block(*a, **kw):  # pragma: no cover - naming alias
+    return block_apply(*a, **kw)

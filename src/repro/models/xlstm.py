@@ -1,0 +1,272 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM keeps a per-head matrix memory C [hd, hd] with exponential input
+gates and sigmoid-in-log-space forget gates.  Training/prefill run the
+*chunkwise* form: intra-chunk quadratic attention-like scores with decay
+weights, inter-chunk state carried by ``lax.scan`` — everything
+stabilised by a running log-scale ``m`` so no exp overflows (the carry is
+``(C*exp(-m), n*exp(-m), m)``).  Decode is the O(1) recurrence.
+
+sLSTM is genuinely sequential (recurrent h -> gate connections), so it
+runs as a time-step ``lax.scan`` — the assignment's xlstm-350m places it
+in a minority of blocks (cfg.slstm_at).
+
+Note the xLSTM output normaliser ``h = num / max(|n.q|, 1)`` is a real
+*division* in the hot path — it routes through the RAPID divider when
+enabled (site "norm").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import float_approx as fa
+from repro.models.layers import ParallelCtx, dense
+from repro.models.params import P
+
+__all__ = [
+    "mlstm_params", "mlstm", "mlstm_decode", "mlstm_init_cache",
+    "slstm_params", "slstm", "slstm_decode", "slstm_init_cache",
+]
+
+_CHUNK = 64
+
+
+def _norm_div(num, den, acfg):
+    sch = acfg.div("norm")
+    if sch:
+        return fa.approx_div(num, den, sch)
+    return num / den
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig):
+    """mLSTM operates in the 2x up-projected space; heads split that."""
+    up = 2 * cfg.d_model
+    return up, up // cfg.n_heads
+
+
+def mlstm_params(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    up, hd = mlstm_dims(cfg)
+    return {
+        "up_proj": P((D, 2 * up), ("embed", "ff")),
+        "wq": P((up, H * hd), ("embed", "heads")),
+        "wk": P((up, H * hd), ("embed", "heads")),
+        "wv": P((up, H * hd), ("embed", "heads")),
+        "wi": P((up, H), ("ff", None), "small"),
+        "wf": P((up, H), ("ff", None), "small"),
+        "f_bias": P((H,), (None,), "ones", 3.0),
+        "down_proj": P((up, D), ("heads", "embed")),
+    }
+
+
+def _gates(xi, params):
+    li = jnp.einsum("...u,uh->...h", xi, params["wi"].astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("...u,uh->...h", xi, params["wf"].astype(jnp.float32))
+        + 3.0 * params["f_bias"].astype(jnp.float32)
+    )
+    return li, lf  # log input gate (unbounded), log forget gate (<0)
+
+
+def _mlstm_core_chunk(q, k, v, li, lf, carry, acfg):
+    """One chunk. q,k,v: [B,H,L,hd]; li,lf: [B,H,L]; carry (Ch,nh,m)."""
+    B, H, L, hd = q.shape
+    Ch, nh, m0 = carry  # Ch: [B,H,hd,hd] (k x v), nh: [B,H,hd], m0: [B,H]
+    F = jnp.cumsum(lf, axis=-1)                     # [B,H,L]
+    b = li - F                                      # log(i) - F
+    M = jnp.maximum(jax.lax.cummax(b, axis=2), m0[..., None])
+    m_t = F + M                                     # stabiliser per step
+    # intra-chunk scores
+    qs = q.astype(jnp.float32) / jnp.sqrt(hd)
+    s = jnp.einsum("bhld,bhtd->bhlt", qs, k.astype(jnp.float32))
+    w = F[..., :, None] + b[..., None, :] - m_t[..., :, None]  # [B,H,L,L]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(mask, w, -jnp.inf)
+    p = jnp.exp(w)
+    num = jnp.einsum("bhlt,bhtd->bhld", p * s, v.astype(jnp.float32))
+    den = (p * s).sum(axis=-1)                      # [B,H,L]
+    # inter-chunk (state) contribution
+    w_st = jnp.exp(F + m0[..., None] - m_t)         # [B,H,L]
+    num = num + w_st[..., None] * jnp.einsum("bhld,bhde->bhle", qs, Ch)
+    den = den + w_st * jnp.einsum("bhld,bhd->bhl", qs, nh)
+    h = _norm_div(num, jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None], acfg)
+    # carry update
+    mL = m_t[..., -1]
+    wc = jnp.exp(F[..., -1] + m0 - mL)              # carry decay
+    wk_ = jnp.exp(F[..., -1:] + b - mL[..., None])  # F_L - F_tau + li_tau, stabilised
+    Ch = wc[..., None, None] * Ch + jnp.einsum(
+        "bhl,bhld,bhle->bhde", wk_, k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    nh = wc[..., None] * nh + jnp.einsum("bhl,bhld->bhd", wk_, k.astype(jnp.float32))
+    return h, (Ch, nh, mL)
+
+
+def _split_heads(x, H):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, -1).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+
+def mlstm(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """Train/prefill. x: [B,S,D] -> ([B,S,D], cache)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    acfg = cfg.approx
+    up2 = dense(x, params["up_proj"], acfg, "mlp")
+    xi, z = jnp.split(up2, 2, axis=-1)
+    xi = ctx.shard(xi, "batch", None, "ff")
+    xif = xi.astype(jnp.float32)
+
+    q = _split_heads(dense(xi, params["wq"], acfg, "attn_proj"), H)
+    k = _split_heads(dense(xi, params["wk"], acfg, "attn_proj"), H)
+    v = _split_heads(dense(xi, params["wv"], acfg, "attn_proj"), H)
+    li, lf = _gates(xif, params)
+    li = li.transpose(0, 2, 1)  # [B,H,S]
+    lf = lf.transpose(0, 2, 1)
+
+    L = min(_CHUNK, S)
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=-1e9)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    steps = (S + pad) // L
+    _, hd = mlstm_dims(cfg)
+
+    def resh(t):
+        return t.reshape(B, H, steps, L, -1).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lis = li.reshape(B, H, steps, L).transpose(2, 0, 1, 3)
+    lfs = lf.reshape(B, H, steps, L).transpose(2, 0, 1, 3)
+
+    def step(carry, xs):
+        qc, kc, vc, lic, lfc = xs
+        h, carry = _mlstm_core_chunk(qc, kc, vc, lic, lfc, carry, acfg)
+        return carry, h
+
+    carry0 = mlstm_init_cache(cfg, B)
+    carry, hs = jax.lax.scan(step, carry0, (qs, ks, vs, lis, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, steps * L, hd)[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+    out = h.astype(x.dtype) * jax.nn.silu(z)
+    out = dense(out, params["down_proj"], acfg, "mlp")
+    return ctx.shard(out, "batch", "seq_act", "act_embed"), carry
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    H = cfg.n_heads
+    _, hd = mlstm_dims(cfg)
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(x, cache, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """One token. x: [B,D]; cache (Ch, nh, m)."""
+    B, D = x.shape
+    H = cfg.n_heads
+    _, hd = mlstm_dims(cfg)
+    acfg = cfg.approx
+    Ch, nh, m0 = cache
+
+    up2 = dense(x[:, None], params["up_proj"], acfg, "mlp")
+    xi, z = jnp.split(up2, 2, axis=-1)
+    xif = xi.astype(jnp.float32)
+    q = dense(xi, params["wq"], acfg, "attn_proj").reshape(B, H, hd)
+    k = dense(xi, params["wk"], acfg, "attn_proj").reshape(B, H, hd)
+    v = dense(xi, params["wv"], acfg, "attn_proj").reshape(B, H, hd)
+    li, lf = _gates(xif[:, 0], params)  # [B,H]
+
+    m_t = jnp.maximum(lf + m0, li)
+    wf = jnp.exp(lf + m0 - m_t)
+    wi = jnp.exp(li - m_t)
+    kf = k.astype(jnp.float32)
+    Ch = wf[..., None, None] * Ch + wi[..., None, None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    nh = wf[..., None] * nh + wi[..., None] * kf
+    qf = q.astype(jnp.float32) / jnp.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", qf, Ch)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nh))
+    h = _norm_div(num, jnp.maximum(den, jnp.exp(-m_t))[..., None], acfg)
+    h = h.reshape(B, H * hd).astype(x.dtype) * jax.nn.silu(z[:, 0])
+    out = dense(h[:, None], params["down_proj"], acfg, "mlp")[:, 0]
+    return out, (Ch, nh, m_t)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_params(cfg: ModelConfig) -> dict:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "w": P((D, 4 * H * hd), ("embed", "heads")),
+        "r": P((H, hd, 4 * hd), (None, None, None), "normal", 0.5),
+        "bias": P((4 * H * hd,), (None,), "zeros"),
+        "down_proj": P((H * hd, D), ("heads", "embed")),
+    }
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return (z, z, jnp.full((batch, H, hd), -1e30, jnp.float32), z)  # c, n, m, h
+
+
+def _slstm_step(params, cfg, acfg, carry, wx_t):
+    """wx_t: [B, 4*H*hd] precomputed input projection at step t."""
+    c, n, m, h = carry
+    H, hd = cfg.n_heads, cfg.hd
+    B = wx_t.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"].astype(jnp.float32))
+    pre = wx_t.reshape(B, H, 4 * hd).astype(jnp.float32) + rec \
+        + params["bias"].astype(jnp.float32).reshape(H, 4 * hd)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c = f_p * c + i_p * zt
+    n = f_p * n + i_p
+    h_new = jnp.tanh(_norm_div(c, jnp.maximum(n, 1e-6), acfg))
+    o = jax.nn.sigmoid(ot)
+    h_new = o * h_new
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    """Sequential scan over time. x: [B,S,D]."""
+    B, S, D = x.shape
+    acfg = cfg.approx
+    wx = dense(x, params["w"], acfg, "mlp")  # [B,S,4*H*hd]
+
+    def step(carry, wx_t):
+        return _slstm_step(params, cfg, acfg, carry, wx_t)
+
+    carry0 = slstm_init_cache(cfg, B)
+    carry, hs = jax.lax.scan(step, carry0, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, -1).astype(x.dtype)
+    out = dense(h, params["down_proj"], acfg, "mlp")
+    return ctx.shard(out, "batch", "seq_act", "act_embed"), carry
+
+
+def slstm_decode(x, cache, params, cfg: ModelConfig, ctx: ParallelCtx):
+    acfg = cfg.approx
+    wx = dense(x[:, None], params["w"], acfg, "mlp")[:, 0]
+    carry, h = _slstm_step(params, cfg, acfg, cache, wx)
+    out = dense(h.reshape(x.shape[0], -1)[:, None].astype(x.dtype),
+                params["down_proj"], acfg, "mlp")[:, 0]
+    return out, carry

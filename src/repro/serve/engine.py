@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill + decode with a fixed-slot batch.
+
+A deliberately small but real engine: requests are admitted into B slots;
+prefill produces the KV cache for a whole batch, then tokens stream out
+of ``decode_step``.  Greedy or temperature sampling.  The cache geometry
+(cache_n) is fixed at engine build so the decode step compiles once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model
+
+__all__ = ["ServeEngine"]
+
+
+@dataclass
+class ServeEngine:
+    model: Model
+    params: dict
+    ctx: ParallelCtx
+    cache_n: int = 256
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._decode = jax.jit(
+            lambda p, t, c: self.model.decode_step(p, t, c, self.ctx))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.ctx, self.cache_n))
+
+    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: List[List[int]], max_new: int = 32,
+                 stop_token: Optional[int] = None) -> List[List[int]]:
+        """Pad prompts to a common length, prefill, decode max_new tokens."""
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        assert plen + max_new <= self.cache_n, "cache too small"
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad (uniform positions)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch)
+
+        rng = jax.random.PRNGKey(self.seed)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, rng)
+        for step in range(max_new):
+            t = np.asarray(tok)
+            for i in range(B):
+                if not done[i]:
+                    out[i].append(int(t[i]))
+                    if stop_token is not None and t[i] == stop_token:
+                        done[i] = True
+            if done.all():
+                break
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits, sub)
+        return out

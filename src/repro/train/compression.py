@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (int8, per-tensor scale).
+
+The distributed-optimization trick for bandwidth-bound DP: gradients are
+quantised to int8 before the data-parallel reduction and the
+quantisation residual is carried into the next step (error feedback),
+which keeps SGD/Adam convergence unbiased in expectation.
+
+Two integration levels:
+
+  * **numerics** (this module + test): `ef_compress` quantises a gradient
+    tree against a carried residual tree; `ef_state` initialises the
+    residuals. Composable with any optimizer.
+  * **collective** level: with XLA autodiff the DP reduction is fused
+    into the backward, so true wire-compression needs the manual-DP
+    step (shard_map over the data axis, all_gather of int8 shards +
+    local dequant-sum).  `compressed_psum` implements that primitive;
+    the launchers keep bf16 reductions by default (already 2x smaller
+    than f32) and expose int8 as an opt-in, since 4-bit-era compression
+    trades a measurable accuracy tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_state", "ef_compress", "compressed_psum"]
+
+
+def ef_state(params):
+    """Zero residual tree matching the parameter tree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads, residuals):
+    """Quantise grads+residuals to int8 resolution; return
+    (compressed_grads, new_residuals)."""
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        deq = _quant_dequant(target)
+        return deq.astype(g.dtype), target - deq
+
+    out = jax.tree.map(one, grads, residuals)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str):
+    """int8 all-gather + local dequant-sum: a psum at 1/4 the f32 wire
+    bytes (call inside shard_map over the DP axis)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)          # [n_dev, ...] int8
+    ss = jax.lax.all_gather(scale, axis_name)      # [n_dev]
+    extra = (1,) * (q.ndim)
+    return jnp.sum(qs.astype(jnp.float32)
+                   * ss.reshape((-1,) + extra), axis=0)

@@ -1,0 +1,177 @@
+"""Sharded optimizers (AdamW, Adafactor) and LR schedules — no optax dep.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the same
+PartitionSpec tree shards it (ZeRO-style: moments live wherever their
+parameter lives, which is already 2D-sharded under FSDP x TP).  Adafactor
+is used for the 100B+ MoE models where full Adam moments would not fit
+chip HBM (factored second moment: O(rows+cols) per matrix).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "make_optimizer", "make_schedule", "opt_param_specs"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"     # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    decay_frac: float = 0.1      # wsd: final decay fraction of total steps
+
+
+def make_schedule(oc: OptConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Step -> lr multiplier * base lr."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum((step + 1.0) / jnp.maximum(oc.warmup_steps, 1), 1.0)
+        if oc.schedule == "cosine":
+            t = jnp.clip((step - oc.warmup_steps)
+                         / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+            mult = 0.5 * (1 + jnp.cos(jnp.pi * t)) * 0.9 + 0.1
+        elif oc.schedule == "wsd":  # warmup-stable-decay (MiniCPM)
+            decay_start = oc.total_steps * (1 - oc.decay_frac)
+            t = jnp.clip((step - decay_start)
+                         / jnp.maximum(oc.total_steps - decay_start, 1), 0, 1)
+            mult = jnp.where(step < decay_start, 1.0, 1.0 - 0.9 * t)
+        else:
+            mult = 1.0
+        return oc.lr * warm * mult
+
+    return sched
+
+
+def opt_param_specs(param_spec_tree, oc: OptConfig):
+    """P-spec tree for the optimizer state (mirrors the parameter tree).
+
+    Works on ``repro.models.params.P`` leaves so the dry-run can derive
+    optimizer shapes + shardings without materialising anything.
+    """
+    from repro.models.params import P
+
+    is_p = lambda x: isinstance(x, P)
+    if oc.name == "adamw":
+        zero = jax.tree.map(
+            lambda p: P(p.shape, p.axes, "zeros", dtype=p.dtype), param_spec_tree,
+            is_leaf=is_p)
+        return {"m": zero, "v": jax.tree.map(
+            lambda p: P(p.shape, p.axes, "zeros", dtype=p.dtype), param_spec_tree,
+            is_leaf=is_p)}
+
+    def one(p):
+        if len(p.shape) >= 2:
+            return {
+                "r": P(p.shape[:-1], p.axes[:-1], "zeros"),
+                "c": P(p.shape[:-2] + p.shape[-1:], p.axes[:-2] + p.axes[-1:],
+                       "zeros"),
+            }
+        return {"v": P(p.shape, p.axes, "zeros")}
+
+    return {"f": jax.tree.map(one, param_spec_tree, is_leaf=is_p)}
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def make_optimizer(oc: OptConfig):
+    """Returns (init_fn(params)->state, update_fn(grads, state, params, step)
+    -> (new_params, new_state)).  State tree leaves shard like params."""
+    sched = make_schedule(oc)
+
+    if oc.name == "adamw":
+        def init(params):
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params)}
+
+        def update(grads, state, params, step):
+            gnorm = _global_norm(grads)
+            scale = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
+            lr = sched(step)
+            b1c = 1 - oc.b1 ** (step.astype(jnp.float32) + 1)
+            b2c = 1 - oc.b2 ** (step.astype(jnp.float32) + 1)
+
+            def upd(p, g, m, v):
+                g = g.astype(jnp.float32) * scale
+                m = oc.b1 * m + (1 - oc.b1) * g
+                v = oc.b2 * v + (1 - oc.b2) * jnp.square(g)
+                step_ = (m / b1c) / (jnp.sqrt(v / b2c) + oc.eps)
+                p32 = p.astype(jnp.float32)
+                p32 = p32 - lr * (step_ + oc.weight_decay * p32)
+                return p32.astype(p.dtype), m, v
+
+            out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+            newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+            newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+            newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+            return newp, {"m": newm, "v": newv}, gnorm
+
+        return init, update
+
+    if oc.name == "adafactor":
+        def init(params):
+            def one(p):
+                if p.ndim >= 2:
+                    return {
+                        "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    }
+                return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+            return {"f": jax.tree.map(one, params)}
+
+        def update(grads, state, params, step):
+            gnorm = _global_norm(grads)
+            scale = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
+            lr = sched(step)
+            decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+            def upd(p, g, f):
+                g = g.astype(jnp.float32) * scale
+                g2 = jnp.square(g) + 1e-30
+                if p.ndim >= 2:
+                    r = decay * f["r"] + (1 - decay) * g2.mean(axis=-1)
+                    c = decay * f["c"] + (1 - decay) * g2.mean(axis=-2)
+                    denom = (r[..., None] * c[..., None, :])
+                    denom = denom / jnp.maximum(
+                        r.mean(axis=-1)[..., None, None], 1e-30)
+                    step_ = g / (jnp.sqrt(denom) + 1e-30)
+                    nf = {"r": r, "c": c}
+                else:
+                    v = decay * f["v"] + (1 - decay) * g2
+                    step_ = g / (jnp.sqrt(v) + 1e-30)
+                    nf = {"v": v}
+                # update clipping (Adafactor RMS rule)
+                rms = jnp.sqrt(jnp.mean(jnp.square(step_)) + 1e-30)
+                step_ = step_ / jnp.maximum(1.0, rms)
+                p32 = p.astype(jnp.float32)
+                p32 = p32 - lr * (step_ + oc.weight_decay * p32)
+                return p32.astype(p.dtype), nf
+
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = tdef.flatten_up_to(grads)
+            flat_f = tdef.flatten_up_to(state["f"])
+            newp, newf = [], []
+            for p, g, f in zip(flat_p, flat_g, flat_f):
+                np_, nf = upd(p, g, f)
+                newp.append(np_)
+                newf.append(nf)
+            return (tdef.unflatten(newp), {"f": tdef.unflatten(newf)}, gnorm)
+
+        return init, update
+
+    raise ValueError(oc.name)

@@ -1,0 +1,35 @@
+"""End-to-end application QoR gates (paper SSV-B acceptance criteria)."""
+import pytest
+
+from repro.apps import harris, jpeg, pan_tompkins
+
+
+@pytest.fixture(scope="module")
+def jpeg_scores():
+    return jpeg.run(("accurate", "rapid", "mitchell"), n_images=2, size=128)
+
+
+def test_jpeg_rapid_psnr_gate(jpeg_scores):
+    # paper gate: >= 28 dB with RAPID mul-10 / div-9
+    assert jpeg_scores["rapid"] >= 28.0
+    # RAPID within ~2.5 dB of accurate (paper: 30.9 -> 28.7)
+    assert jpeg_scores["accurate"] - jpeg_scores["rapid"] < 2.5
+
+
+def test_jpeg_rapid_beats_mitchell(jpeg_scores):
+    assert jpeg_scores["rapid"] > jpeg_scores["mitchell"] + 2.0
+
+
+def test_pan_tompkins_detection():
+    res = pan_tompkins.run(("accurate", "rapid", "mitchell"), n_beats=25)
+    assert res["rapid"]["sensitivity"] >= 0.95      # ~100% detection
+    assert res["rapid"]["ppv"] >= 0.95
+    assert res["rapid"]["psnr_vs_accurate_db"] >= 28.0  # paper gate
+    assert (res["rapid"]["psnr_vs_accurate_db"]
+            > res["mitchell"]["psnr_vs_accurate_db"])
+
+
+def test_harris_correct_vectors():
+    res = harris.run(("accurate", "rapid", "truncated"), n_images=2, size=128)
+    assert res["rapid"] >= 90.0       # paper acceptance bar for tracking
+    assert res["rapid"] > res["truncated"]  # biased truncation hurts (Fig 9)

@@ -1,0 +1,123 @@
+"""Accuracy of the RAPID arithmetic core vs the paper's Table III claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schemes as S
+from repro.core.bitops import ilog2, ilog2_np
+from repro.core.float_approx import approx_div, approx_mul
+from repro.core.mitchell import mitchell_div_np, mitchell_mul_np
+
+# paper Table III (ARE %, PRE %) upper bounds we must meet or beat,
+# with a small slack since our derived partitions differ from Fig. 2
+PAPER_MUL = {  # 16-bit fixed-point-value convention
+    "mitchell": (3.95, 11.2),
+    "rapid3": (1.05, 6.2),
+    "rapid5": (0.95, 4.5),
+    "rapid10": (0.64, 3.7),
+}
+PAPER_DIV = {
+    "mitchell": (4.2, 13.1),
+    "rapid3": (1.04, 5.8),
+    "rapid5": (0.79, 4.4),
+    "rapid9": (0.61, 3.5),
+}
+
+
+def _stats(approx, exact):
+    re = approx / exact - 1.0
+    return 100 * np.abs(re).mean(), 100 * np.abs(re).max(), 100 * re.mean()
+
+
+@pytest.mark.parametrize("name", list(PAPER_MUL))
+def test_mul_accuracy_16bit(name, rng):
+    a = rng.integers(1, 1 << 16, 400_000)
+    b = rng.integers(1, 1 << 16, 400_000)
+    exact = a.astype(np.float64) * b
+    approx = mitchell_mul_np(a, b, S.MUL_SCHEMES[name], 16, quantize=False)
+    are, pre, bias = _stats(approx, exact)
+    t_are, t_pre = PAPER_MUL[name]
+    assert are <= t_are, (name, are)
+    assert pre <= t_pre, (name, pre)
+    if name != "mitchell":
+        assert abs(bias) < 0.3, (name, bias)  # near-zero-bias claim
+
+
+@pytest.mark.parametrize("name", list(PAPER_DIV))
+def test_div_accuracy_16_8(name, rng):
+    a = rng.integers(1, 1 << 16, 400_000)
+    b = rng.integers(1, 1 << 8, 400_000)
+    m = a < (b.astype(np.int64) << 8)
+    a, b = a[m], b[m]
+    exact = a.astype(np.float64) / b
+    approx = mitchell_div_np(a, b, S.DIV_SCHEMES[name], 8, quantize=False)
+    are, pre, bias = _stats(approx, exact)
+    t_are, t_pre = PAPER_DIV[name]
+    assert are <= t_are, (name, are)
+    assert pre <= t_pre, (name, pre)
+
+
+def test_mul_exhaustive_8bit_matches_paper():
+    a = np.arange(1, 256)
+    A, B = np.meshgrid(a, a, indexing="ij")
+    exact = A.astype(np.float64) * B
+    approx = mitchell_mul_np(A, B, S.MITCHELL_MUL, 8, quantize=False)
+    are, pre, _ = _stats(approx, exact)
+    # paper: Mitchell 8-bit ARE 3.77%, PRE 11.11%
+    assert 3.5 < are < 4.0
+    assert abs(pre - 100.0 / 9.0) < 0.05
+
+
+def test_scaling_invariance():
+    """Error statistics must be bit-width independent (paper SSIV-A)."""
+    rng = np.random.default_rng(3)
+    res = []
+    for nb in (8, 12, 16):
+        a = rng.integers(1 << (nb - 4), 1 << nb, 100_000)
+        b = rng.integers(1 << (nb - 4), 1 << nb, 100_000)
+        exact = a.astype(np.float64) * b
+        approx = mitchell_mul_np(a, b, S.RAPID10_MUL, nb, quantize=False)
+        res.append(_stats(approx, exact)[0])
+    assert max(res) - min(res) < 0.15, res
+
+
+def test_quantized_integer_output_truncates():
+    a = np.array([58], np.uint64)
+    b = np.array([18], np.uint64)
+    out = mitchell_mul_np(a, b, S.MITCHELL_MUL, 8)
+    assert out[0] == 992  # paper's worked example (Eq. 6)
+
+
+def test_power_of_two_exact():
+    a = np.asarray([2, 4, 64, 128])
+    b = np.asarray([2, 8, 32, 2])
+    out = mitchell_mul_np(a, b, S.MITCHELL_MUL, 8)
+    np.testing.assert_array_equal(out, a * b)
+
+
+def test_float_path_matches_scalar_model(rng):
+    """f32 bitcast RAPID == the continuous error model within mantissa lsb."""
+    a = rng.uniform(0.5, 100, 50_000).astype(np.float32)
+    b = rng.uniform(0.5, 100, 50_000).astype(np.float32)
+    got = np.asarray(approx_mul(jnp.asarray(a), jnp.asarray(b), "rapid10"))
+    re = got / (a.astype(np.float64) * b) - 1
+    assert 100 * np.abs(re).mean() < 0.64
+    assert 100 * np.abs(re).max() < 3.7
+
+
+def test_float_div_signs_and_edges():
+    a = jnp.asarray([6.0, -6.0, 6.0, -6.0, 0.0, 1.0], jnp.float32)
+    b = jnp.asarray([3.0, 3.0, -3.0, -3.0, 5.0, 0.0], jnp.float32)
+    q = np.asarray(approx_div(a, b, "rapid9"))
+    assert np.sign(q[0]) > 0 and np.sign(q[1]) < 0
+    assert np.sign(q[2]) < 0 and np.sign(q[3]) > 0
+    assert q[4] == 0.0 and np.isinf(q[5])
+    np.testing.assert_allclose(np.abs(q[:4]), 2.0, rtol=0.04)
+
+
+def test_ilog2_jnp_and_np():
+    v = np.array([1, 2, 3, 4, 255, 256, 2**30, 2**31 - 1], np.int64)
+    expect = np.array([int(x).bit_length() - 1 for x in v])
+    np.testing.assert_array_equal(ilog2_np(v), expect)
+    np.testing.assert_array_equal(
+        np.asarray(ilog2(jnp.asarray(v, jnp.int32))), expect)

@@ -1,0 +1,49 @@
+"""Unit tests for the HLO text analyzer on hand-crafted modules."""
+from repro.launch.hlo_analysis import analyze_hlo, _shape_bytes
+
+HLO = """
+HloModule test
+
+%region_body (arg: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups={{0,1}}, dimensions={1}
+  %ar = f32[64,64]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ni, %x)
+}
+
+%region_cond (arg2: (s32[], f32[64,64])) -> pred[] {
+  %arg2 = (s32[], f32[64,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main.1 (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %init = (s32[], f32[64,64]) tuple(%c0, %p0)
+  %w = (s32[], f32[64,64]) while(%init), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[64,64]{1,0}") == 64 * 64 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collectives_trip_weighted():
+    ana = analyze_hlo(HLO)
+    co = ana["collectives"]
+    # all-gather: result 64*128*4 bytes, g=2 -> (g-1)/g factor, x5 trips
+    assert co["all-gather"] == 64 * 128 * 4 * 0.5 * 5
+    # all-reduce: 2*R*(g-1)/g with g=4, x5 trips
+    assert co["all-reduce"] == 2 * 64 * 64 * 4 * 0.75 * 5
+    assert co["reduce-scatter"] == 0.0
+    assert co["total"] == co["all-gather"] + co["all-reduce"]

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/scheme sweeps +
+hypothesis property tests (interpret=True on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schemes as S
+from repro.core.mitchell import mitchell_div_np, mitchell_mul_np
+from repro.core import float_approx as fa
+from repro.kernels.log_matmul.ops import log_matmul
+from repro.kernels.log_matmul.ref import log_matmul_ref
+from repro.kernels.rapid_div.ops import rapid_div
+from repro.kernels.rapid_div.ref import rapid_div_ref
+from repro.kernels.rapid_mul.ops import rapid_mul
+from repro.kernels.rapid_mul.ref import rapid_mul_ref
+
+
+@pytest.mark.parametrize("n_bits", [8, 16])
+@pytest.mark.parametrize("scheme", ["mitchell", "rapid3", "rapid10"])
+@pytest.mark.parametrize("n", [7, 1000, 4096])
+def test_rapid_mul_kernel_bitexact(n_bits, scheme, n):
+    rng = np.random.default_rng(n + n_bits)
+    a = rng.integers(0, 1 << n_bits, n).astype(np.uint32)
+    b = rng.integers(0, 1 << n_bits, n).astype(np.uint32)
+    got = np.asarray(rapid_mul(jnp.asarray(a), jnp.asarray(b), scheme, n_bits))
+    ref = np.asarray(rapid_mul_ref(jnp.asarray(a), jnp.asarray(b),
+                                   S.MUL_SCHEMES[scheme], n_bits))
+    oracle = mitchell_mul_np(a, b, S.MUL_SCHEMES[scheme], n_bits)
+    # uint32 output saturates where the *approximate* product of near-max
+    # operands overshoots 2^32-1 (hardware has a wider output bus there)
+    oracle = np.minimum(oracle, np.uint64(0xFFFFFFFF))
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got.astype(np.uint64), oracle)
+
+
+@pytest.mark.parametrize("n_bits", [4, 8])
+@pytest.mark.parametrize("scheme", ["mitchell", "rapid9"])
+@pytest.mark.parametrize("n", [129, 2048])
+def test_rapid_div_kernel_bitexact(n_bits, scheme, n, rng):
+    a = rng.integers(0, 1 << (2 * n_bits), n).astype(np.uint32)
+    b = rng.integers(0, 1 << n_bits, n).astype(np.uint32)
+    got = np.asarray(rapid_div(jnp.asarray(a), jnp.asarray(b), scheme, n_bits))
+    ref = np.asarray(rapid_div_ref(jnp.asarray(a), jnp.asarray(b),
+                                   S.DIV_SCHEMES[scheme], n_bits))
+    oracle = mitchell_div_np(a, b, S.DIV_SCHEMES[scheme], n_bits)
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got.astype(np.uint64), oracle)
+
+
+@pytest.mark.parametrize("shape", [(8, 16, 8), (33, 70, 17), (128, 300, 64)])
+@pytest.mark.parametrize("scheme", ["mitchell", "rapid10"])
+def test_log_matmul_kernel_vs_oracle(shape, scheme, rng):
+    m, k, n = shape
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    lut = jnp.asarray(fa.mul_lut(scheme))
+    got = log_matmul(x, w, scheme, blocks=(8, 128, 128))
+    want = log_matmul_ref(x, w, lut)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_log_matmul_error_bound(rng):
+    """Dot-product error stays within the per-element PRE (cancellation
+    makes it far smaller — the paper's near-zero-bias aggregation claim)."""
+    x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    got = log_matmul(x, w, "rapid10")
+    exact = x @ w
+    rel = float(jnp.abs(got - exact).mean() / jnp.abs(exact).mean())
+    assert rel < 0.037  # well under the elementwise PRE
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2**16 - 1), b=st.integers(0, 2**16 - 1))
+def test_prop_mul_within_pre_bound(a, b):
+    """Property: every 16-bit product is within the scheme PRE of exact."""
+    out = float(mitchell_mul_np(np.asarray([a]), np.asarray([b]),
+                                S.RAPID10_MUL, 16, quantize=False)[0])
+    if a == 0 or b == 0:
+        assert out == 0.0
+    else:
+        assert abs(out / (a * b) - 1.0) < 0.037
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2**16 - 1), b=st.integers(1, 2**8 - 1))
+def test_prop_div_within_pre_bound(a, b):
+    out = float(mitchell_div_np(np.asarray([a]), np.asarray([b]),
+                                S.RAPID9_DIV, 8, quantize=False)[0])
+    if a == 0:
+        assert out == 0.0
+    else:
+        assert abs(out / (a / b) - 1.0) < 0.035
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1e-20, 1e20), st.floats(1e-20, 1e20))
+def test_prop_float_mul_scale_invariant(x, y):
+    """Relative error depends only on mantissas, not exponents."""
+    a = np.float32(x)
+    b = np.float32(y)
+    if not (np.isfinite(a * b) and a > 0 and b > 0 and a * b > 1e-35):
+        return
+    r1 = float(fa.approx_mul(jnp.float32(a), jnp.float32(b), "rapid5"))
+    r2 = float(fa.approx_mul(jnp.float32(a * 4), jnp.float32(b / 2), "rapid5"))
+    if np.isfinite(r1) and np.isfinite(r2) and r1 > 0:
+        np.testing.assert_allclose(r2 / r1, 2.0, rtol=1e-6)

@@ -1,0 +1,108 @@
+"""Serving correctness: prefill/decode vs full forward; engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model
+from repro.serve.engine import ServeEngine
+
+CTX = ParallelCtx()
+
+
+def _setup(arch, f32=False, **over):
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        over.setdefault("capacity_factor", 8.0)  # no drops -> comparable
+    if f32:
+        over["dtype"] = "float32"
+    if over:
+        cfg = cfg.with_(**over)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _batch(cfg, rng, B, S):
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S], "targets": toks[:, 1:]}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(rng, (B, cfg.frontend_seq, 1024)) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(rng, (B, cfg.frontend_seq, 1024)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_matches_forward(arch):
+    cfg, m, params = _setup(arch)
+    rng = jax.random.PRNGKey(1)
+    batch = _batch(cfg, rng, 2, 12)
+    full = m.forward(params, batch, CTX)[:, -1]
+    extra = cfg.frontend_seq if cfg.family == "vlm" else 0
+    lp, cache = m.prefill(params, batch, CTX, cache_n=16 + extra)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full),
+                               atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_matches_forward(arch):
+    cfg, m, params = _setup(arch)
+    rng = jax.random.PRNGKey(2)
+    batch = _batch(cfg, rng, 2, 12)
+    extra = cfg.frontend_seq if cfg.family == "vlm" else 0
+    lp, cache = m.prefill(params, batch, CTX, cache_n=16 + extra)
+    nt = jnp.argmax(lp, -1).astype(jnp.int32)
+    ld, cache2 = m.decode_step(params, nt, cache, CTX)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nt[:, None]], 1)
+    full2 = m.forward(params, batch2, CTX)[:, -1]
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full2),
+                               atol=8e-2, rtol=8e-2)
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_decode_exact_in_f32():
+    """bf16 tolerance above is pure rounding: f32 must be near-exact."""
+    cfg, m, params = _setup("h2o_danube_1_8b", f32=True)
+    rng = jax.random.PRNGKey(3)
+    batch = _batch(cfg, rng, 2, 12)
+    lp, cache = m.prefill(params, batch, CTX, cache_n=16)
+    nt = jnp.argmax(lp, -1).astype(jnp.int32)
+    ld, _ = m.decode_step(params, nt, cache, CTX)
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nt[:, None]], 1)
+    full2 = m.forward(params, batch2, CTX)[:, -1]
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full2), atol=2e-4)
+
+
+def test_sliding_window_ring_cache():
+    """SWA decode with a ring cache smaller than the generated length."""
+    cfg, m, params = _setup("h2o_danube_1_8b", f32=True,
+                            sliding_window=8)
+    rng = jax.random.PRNGKey(4)
+    B, S = 1, 12
+    toks = jax.random.randint(rng, (B, S + 8), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    lp, cache = m.prefill(params, batch, CTX, cache_n=S + 8)
+    assert cache["layers"]["l0"]["k"].shape[1] == 8  # ring == window
+    # decode 4 tokens; reference = full forward each time
+    cur = toks[:, :S]
+    tok = jnp.argmax(lp, -1).astype(jnp.int32)
+    for _ in range(4):
+        ld, cache = m.decode_step(params, tok, cache, CTX)
+        cur = jnp.concatenate([cur, tok[:, None]], 1)
+        ref = m.forward(params, {"tokens": cur}, CTX)[:, -1]
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(ref), atol=3e-4)
+        tok = jnp.argmax(ld, -1).astype(jnp.int32)
+
+
+def test_engine_generates_deterministically():
+    cfg, m, params = _setup("minicpm_2b")
+    eng = ServeEngine(m, params, CTX, cache_n=64)
+    out1 = eng.generate([[1, 2, 3], [4, 5, 6, 7]], max_new=6)
+    out2 = eng.generate([[1, 2, 3], [4, 5, 6, 7]], max_new=6)
+    assert out1 == out2
+    assert all(len(o) == 6 for o in out1)
