@@ -47,14 +47,22 @@ def run(n: int = 1 << 20, seed: int = 0):
         ("div_exact", _bench(exact_div, a, b)),
         ("div_rapid9", _bench(rapid_div, a, b)),
     ]
-    # matmul: exact dot vs logarithmic (jnp chunked formulation)
+    # matmul: exact dot vs logarithmic, routed through the backend
+    # registry (the resolved name is reported so CI logs show which
+    # execution path RAPID_BACKEND / autodetect actually picked)
+    from repro.core import backend as be
     from repro.core.ops import qmatmul
+    bk = be.resolve_backend_name(None)
     x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
     mm_exact = jax.jit(lambda x, w: qmatmul(x, w, None))
-    mm_rapid = jax.jit(lambda x, w: qmatmul(x, w, "rapid10"))
+    mm_rapid = jax.jit(lambda x, w: qmatmul(x, w, "rapid10", backend=bk))
+    mm_fused = jax.jit(lambda x, w: qmatmul(x, w, "rapid10", backend=bk,
+                                            bias=bias, activation="silu"))
     rows.append(("matmul_exact_256x512x256", _bench(mm_exact, x, w)))
-    rows.append(("matmul_rapid_256x512x256", _bench(mm_rapid, x, w)))
+    rows.append((f"matmul_rapid_256x512x256[{bk}]", _bench(mm_rapid, x, w)))
+    rows.append((f"matmul_rapid_fused_bias_silu[{bk}]", _bench(mm_fused, x, w)))
     return rows
 
 

@@ -1,0 +1,79 @@
+"""Version-compatibility layer over the jax API surface this repo uses.
+
+The repo targets the jax 0.4.x series that ships in the hermetic image
+*and* the current 0.8+ API, which moved/renamed two things we depend on:
+
+  * ``shard_map`` — lives at ``jax.experimental.shard_map.shard_map`` on
+    0.4.x and was promoted to ``jax.shard_map`` on 0.8+;
+  * the replication-check kwarg — called ``check_rep`` on 0.4.x and
+    renamed to ``check_vma`` on 0.8+.
+
+Everything that shard-maps goes through :func:`shard_map` below, which
+accepts the *new* spelling (``check_vma=``) and translates to whatever
+the installed jax understands.  The adapter is resolved once per process
+and cached; :func:`adapt_shard_map` is the pure, cache-free core so tests
+can exercise both signatures with monkeypatched implementations.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Callable, Optional
+
+import jax
+
+__all__ = ["shard_map", "adapt_shard_map", "resolve_shard_map"]
+
+
+def resolve_shard_map() -> Callable:
+    """Locate the installed jax's shard_map implementation."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn  # jax <= 0.4.x
+
+    return fn
+
+
+def _check_kwarg_name(impl: Callable) -> Optional[str]:
+    """Which replication-check kwarg (if any) ``impl`` accepts."""
+    try:
+        params = inspect.signature(impl).parameters
+    except (TypeError, ValueError):  # builtins / C impls: assume modern
+        return "check_vma"
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return None
+
+
+def adapt_shard_map(impl: Callable) -> Callable:
+    """Wrap a shard_map implementation behind the 0.8+ calling convention.
+
+    The returned callable has signature
+    ``(f, *, mesh, in_specs, out_specs, check_vma=None)`` and forwards the
+    check flag under whichever kwarg ``impl`` actually accepts (dropping
+    it entirely for implementations that accept neither).
+    """
+    kwarg = _check_kwarg_name(impl)
+
+    def call(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+        if check_vma is not None and kwarg is not None:
+            kwargs[kwarg] = check_vma
+        return impl(f, **kwargs)
+
+    return call
+
+
+@functools.lru_cache(maxsize=1)
+def _cached_adapter() -> Callable:
+    return adapt_shard_map(resolve_shard_map())
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``shard_map`` (accepts the 0.8+ ``check_vma=``)."""
+    return _cached_adapter()(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=check_vma,
+    )

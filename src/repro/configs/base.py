@@ -46,7 +46,10 @@ class ApproxConfig:
     # which divisions route through the logarithmic divider
     on_softmax: bool = True
     on_norm: bool = True
-    matmul_backend: str = "jnp"  # "jnp" (partitioner-visible) | "pallas" (TPU)
+    # backend-registry name (repro.core.backend): "auto" resolves via
+    # env var / process default / hardware autodetect; or pin one of
+    # "jnp" | "pallas" | "pallas-interpret" explicitly.
+    matmul_backend: str = "auto"
 
     @property
     def active(self) -> bool:
@@ -127,6 +130,11 @@ class ModelConfig:
 
     def with_(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+    def with_backend(self, backend: str) -> "ModelConfig":
+        """Pin the approximate-arithmetic backend (registry name)."""
+        return self.with_(
+            approx=dataclasses.replace(self.approx, matmul_backend=backend))
 
     def reduced(self) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests."""

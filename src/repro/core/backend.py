@@ -1,0 +1,260 @@
+"""Unified approximate-arithmetic backend registry.
+
+The paper's core claim is one pipelined log-domain unit reused across
+multi-kernel applications; this module is the software analogue: every
+``qmatmul`` / ``approx_div`` call site routes through *one* dispatch
+layer instead of hand-picking between the jnp scan formulation, the
+Pallas TPU kernel, and the elementwise float ops.
+
+A backend bundles two entry points:
+
+  * ``matmul(x2, w2, scheme, *, chunk, bias, activation)`` — 2-D
+    ``[M, K] @ [K, N]`` approximate contraction in f32, with an optional
+    fused ``activation(out + bias)`` epilogue;
+  * ``div(a, b, scheme)`` — elementwise approximate divide.
+
+Built-in backends:
+
+  * ``jnp``              — chunked pure-jnp scan (partitioner-visible;
+                           the oracle the kernels are tested against);
+  * ``pallas``           — the TPU kernel in ``repro.kernels.log_matmul``
+                           (VMEM tiled, grid-pipelined);
+  * ``pallas-interpret`` — same kernel under the Pallas interpreter
+                           (CPU debugging / CI parity checks).
+
+Elementwise divides are VPU-native already (int sub + 256-gather), so
+every built-in backend shares the ``float_approx`` implementation for
+``div``; a future fused-softmax kernel can override it per backend.
+
+Selection (``resolve_backend_name``) is one function with a strict
+precedence: explicit argument > ``RAPID_BACKEND`` env var > process
+default (``set_default_backend``) > hardware autodetect (``pallas`` on
+TPU, ``jnp`` elsewhere).  ``None``/"auto" at a call site means "defer to
+the next level down".
+"""
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+
+__all__ = [
+    "Backend",
+    "ENV_VAR",
+    "ACTIVATIONS",
+    "normalize_activation",
+    "apply_epilogue",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "resolve_backend_name",
+    "set_default_backend",
+    "matmul",
+    "div",
+]
+
+ENV_VAR = "RAPID_BACKEND"
+
+# Fused-epilogue activations.  Keep this table tiny and shared: the Pallas
+# kernel applies the *same* jnp function inside the kernel body.  "gelu"
+# is jax's default tanh approximation (matches the model zoo's historic
+# numerics); "gelu_erf" is the exact erf form, which is additionally
+# *bit-stable* across compilation contexts — the tanh approximation's
+# mul/add chain gets FMA-fused differently inside vs outside a
+# pallas_call, so cross-backend bit-parity checks must use gelu_erf.
+ACTIVATIONS: Dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_erf": functools.partial(jax.nn.gelu, approximate=False),
+    "tanh": jnp.tanh,
+}
+
+
+def normalize_activation(activation: Optional[str]) -> Optional[str]:
+    """Canonicalize an epilogue activation name (None for identity).
+
+    The single validation point for every entry into the fused epilogue
+    (ops.qmatmul, backend.apply_epilogue, the Pallas wrapper) so typos
+    raise the same clear error everywhere.
+    """
+    if activation in (None, "none", "linear"):
+        return None
+    if activation not in ACTIVATIONS:
+        raise KeyError(
+            f"unknown activation {activation!r}; have {tuple(ACTIVATIONS)}")
+    return activation
+
+
+def apply_epilogue(out: jnp.ndarray, bias, activation: Optional[str]):
+    """``activation(out + bias)`` — the shared fused-epilogue semantics.
+
+    ``bias`` is ``None`` or a 1-D ``[N]`` vector broadcast over rows;
+    ``activation`` is ``None``/"none" or a key of :data:`ACTIVATIONS`.
+    """
+    activation = normalize_activation(activation)
+    if bias is not None:
+        out = out + bias[None, :]
+    if activation is not None:
+        out = ACTIVATIONS[activation](out)
+    return out
+
+
+# --------------------------------------------------------------------------
+# jnp scan formulation (moved here from core/ops.py so the registry owns
+# every execution path; ops.py re-exports it for the kernels' oracles).
+# --------------------------------------------------------------------------
+
+def log_matmul_scan(
+    x: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray, chunk: int
+) -> jnp.ndarray:
+    """RAPID matmul x[M,K] @ w[K,N] via K-chunked log-domain products.
+
+    ``chunk=1`` degenerates to a strictly sequential left-to-right
+    accumulation — the same association order as the Pallas kernel's
+    rank-1 slab loop, which the bit-exactness tests rely on.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    chunk = min(chunk, k)
+    pad = (-k) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    steps = (k + pad) // chunk
+    xs = x.reshape(m, steps, chunk).transpose(1, 0, 2)  # [steps, M, C]
+    ws = w.reshape(steps, chunk, n)  # [steps, C, N]
+
+    def body(acc, operands):
+        xc, wc = operands
+        prod = fa.log_mul_f32(xc[:, :, None], wc[None, :, :], lut)  # [M,C,N]
+        return acc + prod.sum(axis=1), None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xs, ws))
+    return acc
+
+
+def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None):
+    lut = fa.mul_lut_device(scheme)
+    out = log_matmul_scan(x2, w2, lut, chunk)
+    return apply_epilogue(out, bias, activation)
+
+
+def _matmul_pallas(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
+                   interpret: Optional[bool] = None):
+    # chunk is a jnp-path tuning knob; the kernel has its own block sizes.
+    del chunk
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    return log_matmul(x2, w2, scheme, bias=bias, activation=activation,
+                      interpret=interpret)
+
+
+def _matmul_pallas_interpret(x2, w2, scheme, **kw):
+    kw["interpret"] = True
+    return _matmul_pallas(x2, w2, scheme, **kw)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Backend:
+    """One named execution path for the approximate ops."""
+
+    name: str
+    matmul: Callable
+    div: Callable = field(default=fa.approx_div)
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+_DEFAULT: Optional[str] = None
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    """Add a backend to the registry (third parties included)."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Set (or clear, with ``None``) the process-wide default backend."""
+    global _DEFAULT
+    if name is not None and name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; have {available_backends()}")
+    _DEFAULT = name
+
+
+def _autodetect() -> str:
+    """Hardware default: pallas only on a *single-device* TPU process.
+
+    The pallas matmul is a per-device kernel; inside pjit-traced
+    multi-device code the partitioner must see the jnp formulation (a
+    shard_map-aware pallas backend is a ROADMAP item).  Multi-device
+    TPU runs that have wired the kernel under shard_map themselves can
+    still opt in explicitly (arg/env/set_default_backend).
+    """
+    try:
+        platform = jax.default_backend()
+        n_devices = jax.device_count()
+    except Exception:  # pragma: no cover - no devices at all
+        platform, n_devices = "cpu", 1
+    return "pallas" if platform == "tpu" and n_devices == 1 else "jnp"
+
+
+def resolve_backend_name(name: Optional[str] = None) -> str:
+    """One selection function for every call site.
+
+    Precedence: explicit ``name`` > ``$RAPID_BACKEND`` > process default
+    (:func:`set_default_backend`) > autodetect (pallas on TPU, else jnp).
+    ``None`` and "auto" defer to the next level.
+    """
+    for candidate in (name, os.environ.get(ENV_VAR), _DEFAULT):
+        if candidate and candidate != "auto":
+            if candidate not in _REGISTRY:
+                raise KeyError(
+                    f"unknown backend {candidate!r}; have {available_backends()}")
+            return candidate
+    return _autodetect()
+
+
+def get_backend(name: Optional[str] = None) -> Backend:
+    """Resolve ``name`` (or the ambient default) to a Backend."""
+    return _REGISTRY[resolve_backend_name(name)]
+
+
+def matmul(x2, w2, scheme, *, backend: Optional[str] = None, **kw):
+    """Registry-routed 2-D approximate matmul (see Backend.matmul)."""
+    return get_backend(backend).matmul(x2, w2, scheme, **kw)
+
+
+def div(a, b, scheme, *, backend: Optional[str] = None):
+    """Registry-routed elementwise approximate divide."""
+    return get_backend(backend).div(a, b, scheme)
+
+
+register_backend(Backend(
+    "jnp", _matmul_jnp,
+    description="chunked jnp scan; GSPMD-partitionable oracle"))
+register_backend(Backend(
+    "pallas", _matmul_pallas,
+    description="Pallas TPU kernel (VMEM tiled, grid-pipelined)"))
+register_backend(Backend(
+    "pallas-interpret", _matmul_pallas_interpret,
+    description="Pallas kernel under the interpreter (CPU debug/CI)"))

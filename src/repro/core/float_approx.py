@@ -27,7 +27,7 @@ quantisation at 2^-23 instead of the integer fraction width.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +39,8 @@ from repro.core import schemes
 __all__ = [
     "mul_lut",
     "div_lut",
+    "mul_lut_device",
+    "div_lut_device",
     "log_mul_f32",
     "log_div_f32",
     "log_recip_f32",
@@ -54,20 +56,58 @@ _MIN_NORMAL = np.int32(0x00800000)
 _INF_BITS = np.int32(0x7F800000)
 
 
-def mul_lut(scheme: ErrorScheme | str) -> np.ndarray:
-    """(256,) int32 coefficient LUT for f32 multiply."""
+@lru_cache(maxsize=None)
+def _lut_host(kind: str, scheme: ErrorScheme) -> np.ndarray:
+    """Memoized (256,) int32 host LUT for one (kind, scheme) pair.
+
+    Building the table walks the 16x16 assignment grid in python/numpy —
+    cheap once, but the decode hot path used to redo it (plus a fresh
+    host->device upload) on *every* call site.  The returned array is
+    marked read-only because it is shared across callers.
+    """
+    assert scheme.kind == kind
+    lut = scheme.lut(_F32_FRAC).astype(np.int32)
+    lut.setflags(write=False)
+    return lut
+
+
+@lru_cache(maxsize=None)
+def _lut_device(kind: str, scheme: ErrorScheme, dtype: str):
+    """Memoized on-device LUT per (kind, scheme, dtype): one upload ever.
+
+    ensure_compile_time_eval keeps the cached value a *concrete* device
+    array even when the first call happens inside a jit trace — without
+    it the cache would capture (and leak) a tracer.
+    """
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(_lut_host(kind, scheme), jnp.dtype(dtype))
+
+
+def _as_scheme(kind: str, scheme: ErrorScheme | str) -> ErrorScheme:
     if isinstance(scheme, str):
-        scheme = schemes.MUL_SCHEMES[scheme]
-    assert scheme.kind == "mul"
-    return scheme.lut(_F32_FRAC).astype(np.int32)
+        table = schemes.MUL_SCHEMES if kind == "mul" else schemes.DIV_SCHEMES
+        return table[scheme]
+    return scheme
+
+
+def mul_lut(scheme: ErrorScheme | str) -> np.ndarray:
+    """(256,) int32 coefficient LUT for f32 multiply (host, memoized)."""
+    return _lut_host("mul", _as_scheme("mul", scheme))
 
 
 def div_lut(scheme: ErrorScheme | str) -> np.ndarray:
-    """(256,) int32 coefficient LUT for f32 divide."""
-    if isinstance(scheme, str):
-        scheme = schemes.DIV_SCHEMES[scheme]
-    assert scheme.kind == "div"
-    return scheme.lut(_F32_FRAC).astype(np.int32)
+    """(256,) int32 coefficient LUT for f32 divide (host, memoized)."""
+    return _lut_host("div", _as_scheme("div", scheme))
+
+
+def mul_lut_device(scheme: ErrorScheme | str, dtype: str = "int32"):
+    """(256,) on-device multiply LUT, memoized per (scheme, dtype)."""
+    return _lut_device("mul", _as_scheme("mul", scheme), dtype)
+
+
+def div_lut_device(scheme: ErrorScheme | str, dtype: str = "int32"):
+    """(256,) on-device divide LUT, memoized per (scheme, dtype)."""
+    return _lut_device("div", _as_scheme("div", scheme), dtype)
 
 
 def _log_mul_bits(m1: jnp.ndarray, m2: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
@@ -148,7 +188,7 @@ def log_recip_f32(b: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
 @partial(jax.custom_jvp, nondiff_argnums=(2,))
 def approx_mul(a: jnp.ndarray, b: jnp.ndarray, scheme: str = "rapid10") -> jnp.ndarray:
     orig = a.dtype
-    lut = jnp.asarray(mul_lut(scheme))
+    lut = mul_lut_device(scheme)
     out = log_mul_f32(a.astype(jnp.float32), b.astype(jnp.float32), lut)
     return out.astype(orig)
 
@@ -163,7 +203,7 @@ def _approx_mul_jvp(scheme, primals, tangents):
 @partial(jax.custom_jvp, nondiff_argnums=(2,))
 def approx_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str = "rapid9") -> jnp.ndarray:
     orig = a.dtype
-    lut = jnp.asarray(div_lut(scheme))
+    lut = div_lut_device(scheme)
     out = log_div_f32(a.astype(jnp.float32), b.astype(jnp.float32), lut)
     return out.astype(orig)
 

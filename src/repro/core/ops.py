@@ -1,17 +1,52 @@
 """Public RAPID arithmetic API used by the model zoo and applications.
 
-Two execution paths exist for every op:
+Execution backends
+------------------
+Every approximate op routes through the backend registry in
+:mod:`repro.core.backend`; the available built-ins are:
 
-  * ``jnp``    — a chunked pure-jnp formulation (bitcast + integer add +
-                 256-gather + reduce).  This is what the pjit/GSPMD
-                 partitioner sees for the multi-pod dry-run, and the oracle
-                 the Pallas kernels are tested against.
-  * ``pallas`` — the TPU kernel in ``repro.kernels.log_matmul`` (VMEM
-                 tiled, grid-pipelined).  Selected via ``backend="pallas"``
-                 by the launcher when running on real TPU.
+  * ``jnp``              — a chunked pure-jnp formulation (bitcast +
+                           integer add + 256-gather + reduce).  This is
+                           what the pjit/GSPMD partitioner sees for the
+                           multi-pod dry-run, and the oracle the Pallas
+                           kernels are tested against.
+  * ``pallas``           — the TPU kernel in ``repro.kernels.log_matmul``
+                           (VMEM tiled, grid-pipelined).
+  * ``pallas-interpret`` — the same kernel under the Pallas interpreter
+                           (CPU debugging / backend-parity tests).
+
+Backend selection is one function (``backend.resolve_backend_name``)
+with strict precedence:
+
+  1. explicit ``backend=`` argument at the call site,
+  2. the ``RAPID_BACKEND`` environment variable,
+  3. the process default set via ``backend.set_default_backend``,
+  4. hardware autodetect — ``pallas`` on TPU, ``jnp`` elsewhere.
+
+``backend=None`` (or ``"auto"``) at any call site defers down the list,
+so models/configs can stay backend-agnostic and the launcher (or an env
+var in CI) picks the execution path.
+
+Batched operation
+-----------------
+``qmatmul`` contracts the last dim of ``x`` with the first dim of ``w``
+through a single reshaped 2-D code path: ``x`` may carry arbitrary
+leading batch dims and ``w`` arbitrary *trailing* output dims (e.g. a
+``(K, H, D)`` attention projection).  ``qmatmul_batched`` additionally
+vmaps shared *leading* batch dims on both operands (e.g. per-expert MoE
+weights ``(E, K, N)`` against ``(E, C, K)`` token buffers).
+
+Fused epilogue
+--------------
+``bias`` and ``activation`` are fused into the matmul epilogue on every
+backend: the jnp path applies ``activation(out + bias)`` on the scan
+accumulator; the Pallas kernel applies the same expression to the output
+tile on its last K-grid visit while it is still resident in VMEM.
 
 Gradients: RAPID forward ops are near-unbiased (paper SS IV-A, SS V-B), so
-training uses straight-through exact gradients (standard QAT practice).
+training uses straight-through exact gradients (standard QAT practice);
+the epilogue backward differentiates the activation at the *exact*
+pre-activation value.
 """
 from __future__ import annotations
 
@@ -21,41 +56,17 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import float_approx as fa
+from repro.core import backend as be
 
 __all__ = [
     "qmatmul",
+    "qmatmul_batched",
     "qeinsum_mk_kn",
+    "qdiv",
     "approx_softmax",
     "approx_rms_normalize",
     "approx_mean",
 ]
-
-
-def _log_matmul_jnp(
-    x: jnp.ndarray, w: jnp.ndarray, lut: jnp.ndarray, chunk: int
-) -> jnp.ndarray:
-    """RAPID matmul x[M,K] @ w[K,N] via K-chunked log-domain products."""
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2, (x.shape, w.shape)
-    chunk = min(chunk, k)
-    pad = (-k) % chunk
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad)))
-        w = jnp.pad(w, ((0, pad), (0, 0)))
-    steps = (k + pad) // chunk
-    xs = x.reshape(m, steps, chunk).transpose(1, 0, 2)  # [steps, M, C]
-    ws = w.reshape(steps, chunk, n)  # [steps, C, N]
-
-    def body(acc, operands):
-        xc, wc = operands
-        prod = fa.log_mul_f32(xc[:, :, None], wc[None, :, :], lut)  # [M,C,N]
-        return acc + prod.sum(axis=1), None
-
-    acc0 = jnp.zeros((m, n), jnp.float32)
-    acc, _ = jax.lax.scan(body, acc0, (xs, ws))
-    return acc
 
 
 def qmatmul(
@@ -63,68 +74,148 @@ def qmatmul(
     w: jnp.ndarray,
     scheme: Optional[str] = None,
     chunk: int = 64,
-    backend: str = "jnp",
+    backend: Optional[str] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
 ) -> jnp.ndarray:
     """Contract the last dim of ``x`` with the first dim of ``w``.
 
     ``scheme=None`` (or "exact") is the accurate MXU path; any RAPID/
-    Mitchell scheme name routes through the logarithmic multiplier.
-    Output dtype follows ``x``; RAPID internals are f32.
+    Mitchell scheme name routes through the logarithmic multiplier on the
+    backend selected by ``backend`` (see module docstring for the
+    resolution order).  Output dtype follows ``x``; RAPID internals are
+    f32.  ``bias`` must have shape ``w.shape[1:]`` and ``activation`` is
+    a key of ``repro.core.backend.ACTIVATIONS``; both are fused into the
+    matmul epilogue as ``activation(out + bias)``.
 
     The exact path is a *plain* dot (fully transparent to autodiff and
     remat policies); the approximate path is a custom_vjp with straight-
     through exact gradients.
     """
+    activation = be.normalize_activation(activation)
+    if bias is not None and bias.shape != w.shape[1:]:
+        raise ValueError(f"bias shape {bias.shape} != w.shape[1:] {w.shape[1:]}")
     if scheme in (None, "exact"):
-        return jax.lax.dot_general(
+        out = jax.lax.dot_general(
             x, w, (((x.ndim - 1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ).astype(x.dtype)
-    return _qmatmul_approx(x, w, scheme, chunk, backend)
+        )
+        # same epilogue semantics as the approximate backends: bias add
+        # and activation in f32, then cast to the input dtype
+        if bias is not None:
+            out = out + bias
+        if activation is not None:
+            out = be.ACTIVATIONS[activation](out)
+        return out.astype(x.dtype)
+    backend = be.resolve_backend_name(backend)
+    return _qmatmul_approx(x, w, bias, scheme, chunk, backend, activation)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _qmatmul_approx(
     x: jnp.ndarray,
     w: jnp.ndarray,
+    bias: Optional[jnp.ndarray],
     scheme: str,
     chunk: int = 64,
     backend: str = "jnp",
+    activation: Optional[str] = None,
 ) -> jnp.ndarray:
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k).astype(jnp.float32)
     w2 = w.reshape(k, -1).astype(jnp.float32)
-    if backend == "pallas":
-        from repro.kernels.log_matmul.ops import log_matmul
-
-        out = log_matmul(x2, w2, scheme)
-    else:
-        lut = jnp.asarray(fa.mul_lut(scheme))
-        out = _log_matmul_jnp(x2, w2, lut, chunk)
+    b2 = None if bias is None else bias.astype(jnp.float32).reshape(-1)
+    out = be.matmul(x2, w2, scheme, backend=backend, chunk=chunk,
+                    bias=b2, activation=activation)
     return out.reshape(*lead, *w.shape[1:]).astype(x.dtype)
 
 
-def _qmatmul_fwd(x, w, scheme, chunk, backend):
-    return _qmatmul_approx(x, w, scheme, chunk, backend), (x, w)
+def _qmatmul_fwd(x, w, bias, scheme, chunk, backend, activation):
+    out = _qmatmul_approx(x, w, bias, scheme, chunk, backend, activation)
+    return out, (x, w, bias)
 
 
-def _qmatmul_bwd(scheme, chunk, backend, res, g):
-    x, w = res
-    # straight-through: exact transposed contractions for the cotangents
-    g2 = g.reshape(-1, w.shape[1:][-1] if w.ndim > 1 else 1)
-    x2 = x.reshape(-1, x.shape[-1])
-    dx = jnp.dot(g2, w.reshape(x.shape[-1], -1).T).reshape(x.shape)
-    dw = jnp.dot(x2.T, g2).reshape(w.shape)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
+def _qmatmul_bwd(scheme, chunk, backend, activation, res, g):
+    # straight-through: exact transposed contractions for the cotangents,
+    # with the activation differentiated at the exact pre-activation value
+    x, w, bias = res
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    w2 = w.reshape(k, -1).astype(jnp.float32)
+    g2 = g.reshape(-1, w2.shape[1]).astype(jnp.float32)
+    if activation is not None:
+        z = jnp.dot(x2, w2)
+        if bias is not None:
+            z = z + bias.astype(jnp.float32).reshape(-1)[None, :]
+        _, pullback = jax.vjp(be.ACTIVATIONS[activation], z)
+        (g2,) = pullback(g2)
+    dx = jnp.dot(g2, w2.T).reshape(x.shape).astype(x.dtype)
+    dw = jnp.dot(x2.T, g2).reshape(w.shape).astype(w.dtype)
+    db = (None if bias is None
+          else g2.sum(axis=0).reshape(bias.shape).astype(bias.dtype))
+    return dx, dw, db
 
 
 _qmatmul_approx.defvjp(_qmatmul_fwd, _qmatmul_bwd)
 
 
+def qmatmul_batched(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scheme: Optional[str] = None,
+    chunk: int = 64,
+    backend: Optional[str] = None,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Batched matmul with *shared* leading batch dims on ``x`` and ``w``.
+
+    ``x``: ``[*B, M, K]``; ``w``: ``[*B, K, N]`` -> ``[*B, M, N]`` — the
+    per-expert MoE contraction.  Implemented as vmap over :func:`qmatmul`
+    so every batch element reuses the same registry-dispatched 2-D path
+    (and the same straight-through custom_vjp).  ``bias`` may be shared
+    (shape ``w.shape[nb:][1:]``, broadcast over the batch) or per-batch
+    (shape ``w.shape[:nb] + w.shape[nb+1:]``).
+    """
+    if w.ndim == 2:
+        return qmatmul(x, w, scheme, chunk, backend,
+                       bias=bias, activation=activation)
+    nb = w.ndim - 2
+    if x.shape[:nb] != w.shape[:nb]:
+        raise ValueError(f"batch dims mismatch: {x.shape[:nb]} vs {w.shape[:nb]}")
+    bias_axis = None
+    if bias is not None:
+        if bias.shape == w.shape[nb + 1:]:
+            bias_axis = None  # shared across the batch
+        elif bias.shape == w.shape[:nb] + w.shape[nb + 1:]:
+            bias_axis = 0
+        else:
+            raise ValueError(
+                f"bias shape {bias.shape} must be {w.shape[nb + 1:]} (shared) "
+                f"or {w.shape[:nb] + w.shape[nb + 1:]} (per-batch)")
+    fn = lambda xb, wb, bb: qmatmul(  # noqa: E731
+        xb, wb, scheme, chunk, backend, bias=bb, activation=activation)
+    for _ in range(nb):
+        fn = jax.vmap(fn, in_axes=(0, 0, bias_axis))
+    return fn(x, w, bias)
+
+
 def qeinsum_mk_kn(x, w, scheme=None, **kw):
     """Alias kept for symmetry with the kernels' ref.py naming."""
     return qmatmul(x, w, scheme, **kw)
+
+
+def qdiv(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scheme: str,
+    backend: Optional[str] = None,
+) -> jnp.ndarray:
+    """Registry-routed elementwise approximate divide (broadcasting ok)."""
+    return be.div(a, b, scheme, backend=backend)
 
 
 def approx_softmax(
@@ -141,7 +232,7 @@ def approx_softmax(
     denom = jnp.sum(e, axis=axis, keepdims=True)
     if div_scheme in (None, "exact"):
         return e / denom
-    return fa.approx_div(e, denom, div_scheme).astype(x.dtype)
+    return qdiv(e, denom, div_scheme).astype(x.dtype)
 
 
 def approx_rms_normalize(
@@ -152,7 +243,7 @@ def approx_rms_normalize(
     denom = jnp.sqrt(var + eps)
     if div_scheme in (None, "exact"):
         return (x.astype(jnp.float32) / denom).astype(x.dtype)
-    return fa.approx_div(x.astype(jnp.float32), denom, div_scheme).astype(x.dtype)
+    return qdiv(x.astype(jnp.float32), denom, div_scheme).astype(x.dtype)
 
 
 def approx_mean(
@@ -163,4 +254,4 @@ def approx_mean(
     n = jnp.float32(x.shape[axis])
     if div_scheme in (None, "exact"):
         return s / n
-    return fa.approx_div(s.astype(jnp.float32), n, div_scheme).astype(x.dtype)
+    return qdiv(s.astype(jnp.float32), n, div_scheme).astype(x.dtype)

@@ -15,6 +15,13 @@ Grid layout: (M/bm, N/bn, K/bk); M, N are parallel, K is sequential and
 accumulates into the output tile (revisited across the K dimension).
 VMEM working set: bm*bk + bk*bn + bm*bn floats + the 1 KiB coefficient
 LUT.  MXU is untouched; arithmetic is pure VPU int32.
+
+Fused epilogue: an optional ``activation(out + bias)`` is applied to the
+output tile on its *last* K-grid visit, while it is still resident in
+VMEM — the bias add and activation cost no extra HBM round-trip.  The
+activation functions are shared with the jnp scan path (see
+``repro.core.backend.ACTIVATIONS``), so the two backends agree bit-for-
+bit on identically-ordered accumulations.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.backend import ACTIVATIONS
 
 F32_BIAS = 127 << 23
 F32_ABS = 0x7FFFFFFF
@@ -52,8 +61,14 @@ def _approx_prod(bx_col: jnp.ndarray, bw_row: jnp.ndarray, lut: jnp.ndarray):
     return jax.lax.bitcast_convert_type(s | (s1 ^ s2), jnp.float32)
 
 
-def _kernel(x_ref, w_ref, lut_ref, o_ref, *, bk: int, unroll: int):
+def _kernel(x_ref, w_ref, lut_ref, *rest, bk: int, unroll: int, nk: int,
+            activation, has_bias: bool):
     """Accumulate one (bm, bn) output tile over the current K block."""
+    if has_bias:
+        bias_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -72,41 +87,63 @@ def _kernel(x_ref, w_ref, lut_ref, o_ref, *, bk: int, unroll: int):
     acc = jax.lax.fori_loop(0, bk // unroll, body, acc)
     o_ref[...] += acc
 
+    if has_bias or activation is not None:
+        # epilogue on the tile's final K visit, while it sits in VMEM
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _epilogue():
+            z = o_ref[...]
+            if has_bias:
+                z = z + bias_ref[...][None, :]
+            if activation is not None:
+                z = ACTIVATIONS[activation](z)
+            o_ref[...] = z
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "unroll", "interpret"),
+    static_argnames=("bm", "bn", "bk", "unroll", "activation", "interpret"),
 )
 def log_matmul_pallas(
     x: jnp.ndarray,
     w: jnp.ndarray,
     lut: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
     *,
     bm: int = 256,
     bn: int = 256,
     bk: int = 512,
     unroll: int = 8,
+    activation: str | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """x[M,K] @ w[K,N] with RAPID approximate products. f32 in/out.
 
-    M, N, K must be divisible by the block sizes (ops.py pads).
+    M, N, K must be divisible by the block sizes (ops.py pads); ``bias``
+    (if given) is [N] and fused together with ``activation`` into the
+    output tile's last K visit.
     """
     m, k = x.shape
     _, n = w.shape
     grid = (m // bm, n // bn, k // bk)
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((256,), lambda i, j, kk: (0,)),
+    ]
+    operands = [x, w, lut]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        operands.append(bias)
     return pl.pallas_call(
-        functools.partial(_kernel, bk=bk, unroll=unroll),
+        functools.partial(_kernel, bk=bk, unroll=unroll, nk=grid[2],
+                          activation=activation, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((256,), lambda i, j, kk: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
         ) if not interpret else None,
         interpret=interpret,
-    )(x, w, lut)
+    )(*operands)

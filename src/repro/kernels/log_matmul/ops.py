@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import float_approx as fa
+from repro.core.backend import normalize_activation
 from repro.kernels.log_matmul.log_matmul import log_matmul_pallas
 
 __all__ = ["log_matmul"]
@@ -23,19 +24,30 @@ def log_matmul(
     w: jnp.ndarray,
     scheme: str = "rapid10",
     *,
+    bias: jnp.ndarray | None = None,
+    activation: str | None = None,
     blocks=None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """RAPID approximate x @ w (f32). Pads every dim to the block grid."""
+    """RAPID approximate x @ w (f32). Pads every dim to the block grid.
+
+    ``bias`` ([N]) and ``activation`` (a ``repro.core.backend.ACTIVATIONS``
+    key) are fused into the kernel's output-tile epilogue.
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    lut = jnp.asarray(fa.mul_lut(scheme))
+    activation = normalize_activation(activation)
+    lut = fa.mul_lut_device(scheme)
     m, k = x.shape
     _, n = w.shape
     bm, bn, bk = blocks or _pick_blocks(m, n, k)
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
     wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
-    out = log_matmul_pallas(xp, wp, lut, bm=bm, bn=bn, bk=bk,
-                            unroll=min(8, bk), interpret=interpret)
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.astype(jnp.float32), (0, pn))
+    out = log_matmul_pallas(xp, wp, lut, bp, bm=bm, bn=bn, bk=bk,
+                            unroll=min(8, bk), activation=activation,
+                            interpret=interpret)
     return out[:m, :n]

@@ -16,8 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ApproxConfig, ModelConfig
-from repro.core import float_approx as fa
-from repro.core.ops import qmatmul
+from repro.core.ops import qdiv, qmatmul
 from repro.models.params import P
 
 __all__ = [
@@ -79,9 +78,16 @@ class ParallelCtx:
 # dense / norms / rope
 # --------------------------------------------------------------------------
 
-def dense(x, w, acfg: ApproxConfig, site: str):
-    """x @ w with optional RAPID multiplier at this site."""
-    return qmatmul(x, w, acfg.mul(site), backend=acfg.matmul_backend)
+def dense(x, w, acfg: ApproxConfig, site: str, bias=None, activation=None):
+    """x @ w with optional RAPID multiplier at this site.
+
+    ``bias``/``activation`` ride the fused matmul epilogue (exact and
+    approximate backends alike); the backend itself comes from the
+    registry via ``acfg.matmul_backend`` ("auto" defers to env/default/
+    hardware — see repro.core.backend).
+    """
+    return qmatmul(x, w, acfg.mul(site), backend=acfg.matmul_backend,
+                   bias=bias, activation=activation)
 
 
 def norm_params(cfg: ModelConfig, kind: str = "rms") -> dict:
@@ -97,7 +103,7 @@ def rms_norm(x, params, eps: float, acfg: ApproxConfig):
     denom = jnp.sqrt(var + eps)
     sch = acfg.div("norm")
     if sch:
-        y = fa.approx_div(xf, denom, sch)
+        y = qdiv(xf, denom, sch)
     else:
         y = xf / denom
     return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
@@ -110,7 +116,7 @@ def layer_norm(x, params, eps: float, acfg: ApproxConfig):
     denom = jnp.sqrt(var + eps)
     sch = acfg.div("norm")
     if sch:
-        y = fa.approx_div(xf - mu, denom, sch)
+        y = qdiv(xf - mu, denom, sch)
     else:
         y = (xf - mu) / denom
     y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
@@ -156,7 +162,7 @@ def _online_softmax_combine(acc, l, m, acfg: ApproxConfig):
     sch = acfg.div("softmax")
     l = jnp.maximum(l, 1e-20)
     if sch:
-        return fa.approx_div(acc, l[..., None], sch)
+        return qdiv(acc, l[..., None], sch)
     return acc / l[..., None]
 
 
@@ -227,8 +233,7 @@ def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
     if sch:
         m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
         e = jnp.exp(s - m)
-        p = fa.approx_div(e, jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-20),
-                          sch)
+        p = qdiv(e, jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-20), sch)
     else:
         p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
@@ -356,7 +361,7 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
     if seq_shard_axis is None:
         m, l, acc = local_stats(qf, k_cache, v_cache, slot_positions)
     else:
-        from jax import shard_map  # jax >= 0.8
+        from repro.compat import shard_map
 
         mesh = ctx.mesh
         batch_ax = ctx.rules.get("batch") if q.shape[0] > 1 else None
@@ -404,12 +409,12 @@ def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
 
 
 def mlp(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+    # the gate/up activation rides the matmul's fused epilogue (on the
+    # pallas backend it is applied to the VMEM-resident output tile)
     acfg = cfg.approx
-    h = dense(x, params["w1"], acfg, "mlp")
+    h = dense(x, params["w1"], acfg, "mlp", activation=cfg.act)
     h = ctx.shard(h, "batch", None, "ff")
     if cfg.act == "silu":
-        h = jax.nn.silu(h) * dense(x, params["w3"], acfg, "mlp")
-    else:
-        h = jax.nn.gelu(h)
+        h = h * dense(x, params["w3"], acfg, "mlp")
     out = dense(h, params["w2"], acfg, "mlp")
     return ctx.shard(out, "batch", "seq_act", "act_embed")

@@ -18,10 +18,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec
 
-from repro.configs.base import ModelConfig
+from repro.compat import shard_map
+
+from repro.configs.base import ApproxConfig, ModelConfig
+from repro.core.ops import qmatmul_batched
 from repro.models.layers import ParallelCtx, mlp, mlp_params
 from repro.models.params import P
 
@@ -43,12 +45,25 @@ def moe_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     return p
 
 
-def _expert_compute(buf, w1, w3, w2):
+def _expert_compute(buf, w1, w3, w2, acfg: Optional[ApproxConfig] = None):
     """buf: [E_loc, C, D] -> SwiGLU through per-expert weights.
 
     Inputs stay in their (bf16) storage dtype; the MXU accumulates f32
     (preferred_element_type) — halves the routing buffers' footprint.
+    When the mul scheme is active at the "mlp" site, the per-expert
+    contractions route through the backend registry's vmapped batched
+    qmatmul (with the silu gate fused into the w1 epilogue) instead of
+    the exact einsum.
     """
+    sch = acfg.mul("mlp") if acfg is not None else None
+    if sch:
+        bk = acfg.matmul_backend
+        g1 = qmatmul_batched(buf, w1.astype(buf.dtype), sch, backend=bk,
+                             activation="silu")
+        h3 = qmatmul_batched(buf, w3.astype(buf.dtype), sch, backend=bk)
+        act = (g1.astype(jnp.float32) * h3.astype(jnp.float32)).astype(buf.dtype)
+        return qmatmul_batched(act, w2.astype(buf.dtype), sch,
+                               backend=bk).astype(jnp.float32)
     f32 = jnp.float32
     h1 = jnp.einsum("ecd,edf->ecf", buf, w1.astype(buf.dtype),
                     preferred_element_type=f32)
@@ -60,7 +75,8 @@ def _expert_compute(buf, w1, w3, w2):
 
 
 def _route_and_compute(tokens, router_w, w1, w3, w2, *, n_experts: int,
-                       k: int, cap: int, e_lo: int):
+                       k: int, cap: int, e_lo: int,
+                       acfg: Optional[ApproxConfig] = None):
     """Core dropless-ish routing on one device's tokens + expert slice.
 
     tokens: [T, D] (local); w*: [E_loc, ...] local expert slice starting
@@ -89,7 +105,7 @@ def _route_and_compute(tokens, router_w, w1, w3, w2, *, n_experts: int,
 
     gathered = tokens[tok_idx] * keep[:, None].astype(tokens.dtype)
     buf = jnp.zeros((e_loc, cap, D), tokens.dtype).at[le, lp].add(gathered)
-    buf_out = _expert_compute(buf, w1, w3, w2)
+    buf_out = _expert_compute(buf, w1, w3, w2, acfg)
 
     contrib = buf_out[le, lp] * (sg * keep)[:, None]
     out = jnp.zeros((T, D), jnp.float32).at[tok_idx].add(contrib)
@@ -97,7 +113,8 @@ def _route_and_compute(tokens, router_w, w1, w3, w2, *, n_experts: int,
 
 
 def _route_a2a(tokens, router_w, w1, w3, w2, *, n_experts: int, k: int,
-               cap: int, e_loc: int, model_axis: str):
+               cap: int, e_loc: int, model_axis: str,
+               acfg: Optional[ApproxConfig] = None):
     """Production EP dispatch: tokens stay sequence-sharded; capacity
     buffers travel to expert owners via all_to_all and come back the same
     way.  tokens: [T_s, D] (this device's batch x seq shard); w*: local
@@ -141,7 +158,7 @@ def _route_a2a(tokens, router_w, w1, w3, w2, *, n_experts: int, k: int,
     flat_eid = recv_eid.reshape(n_slots)
     buf = jnp.zeros((e_loc, n_slots, D), tokens.dtype).at[
         flat_eid, jnp.arange(n_slots)].set(flat_tok)
-    buf_out = _expert_compute(buf, w1, w3, w2)
+    buf_out = _expert_compute(buf, w1, w3, w2, acfg)
     ans = buf_out[flat_eid, jnp.arange(n_slots)].astype(tokens.dtype)
     ans = (ans.astype(jnp.float32) * recv_gate.reshape(n_slots, 1)).astype(
         tokens.dtype)
@@ -166,7 +183,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
         cap = max(1, int(-(-T * k * cfg.capacity_factor // E)))
         out = _route_and_compute(
             x.reshape(T, D), router_w, params["w1"], params["w3"], params["w2"],
-            n_experts=E, k=k, cap=cap, e_lo=0,
+            n_experts=E, k=k, cap=cap, e_lo=0, acfg=cfg.approx,
         ).reshape(B, S, D)
     else:
         mesh = ctx.mesh
@@ -212,7 +229,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_a2a(
                     xl.reshape(bl * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_loc=e_loc,
-                    model_axis=model_axis,
+                    model_axis=model_axis, acfg=cfg.approx,
                 )
                 return out.reshape(bl, sl, D)
 
@@ -250,6 +267,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_and_compute(
                     xg.reshape(bg * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_lo=mi * e_loc,
+                    acfg=cfg.approx,
                 )
                 out = jax.lax.psum(out, (model_axis, fsdp_axis))
                 # take this device's batch rows back
@@ -282,6 +300,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_and_compute(
                     xl.reshape(bl * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_lo=mi * e_loc,
+                    acfg=cfg.approx,
                 )
                 out = jax.lax.psum(out, model_axis)
                 return out.reshape(bl, sl, D)

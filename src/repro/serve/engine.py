@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as be
 from repro.models.layers import ParallelCtx
 from repro.models.model import Model
 
@@ -28,8 +29,17 @@ class ServeEngine:
     cache_n: int = 256
     temperature: float = 0.0
     seed: int = 0
+    # approximate-arithmetic backend (registry name); None defers to the
+    # model config / env / hardware autodetect.  Resolved once at engine
+    # build so prefill+decode compile against a concrete backend.
+    backend: Optional[str] = None
 
     def __post_init__(self):
+        resolved = be.resolve_backend_name(
+            self.backend or self.model.cfg.approx.matmul_backend)
+        if resolved != self.model.cfg.approx.matmul_backend:
+            self.model = Model(self.model.cfg.with_backend(resolved))
+        self.backend = resolved
         self._decode = jax.jit(
             lambda p, t, c: self.model.decode_step(p, t, c, self.ctx))
         self._prefill = jax.jit(

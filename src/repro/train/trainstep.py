@@ -20,11 +20,26 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as be
 from repro.models.layers import ParallelCtx
 from repro.models.model import Model
 from repro.train.optimizer import OptConfig, make_optimizer, make_schedule
 
 __all__ = ["make_train_step", "make_eval_step"]
+
+
+def _pin_backend(model: Model, backend: Optional[str]) -> Model:
+    """Resolve the registry backend once at step-build time.
+
+    Pinning here (instead of per-trace inside jit) means env-var changes
+    after the step is built cannot silently flip the compiled kernel
+    choice between microbatches or across recompiles.
+    """
+    resolved = be.resolve_backend_name(
+        backend or model.cfg.approx.matmul_backend)
+    if resolved == model.cfg.approx.matmul_backend:
+        return model
+    return Model(model.cfg.with_backend(resolved))
 
 
 def _cast_tree(tree, dtype):
@@ -35,9 +50,13 @@ def _cast_tree(tree, dtype):
 
 
 def make_train_step(model: Model, oc: OptConfig, ctx: ParallelCtx,
-                    microbatches: int = 1):
+                    microbatches: int = 1, backend: Optional[str] = None):
     """Returns train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics)."""
+    (params, opt_state, metrics).
+
+    ``backend`` pins the approximate-arithmetic registry backend for the
+    whole step (None = resolve from config/env/hardware)."""
+    model = _pin_backend(model, backend)
     init_opt, update = make_optimizer(oc)
     sched = make_schedule(oc)
     cdt = jnp.dtype(model.cfg.dtype)
@@ -95,7 +114,9 @@ def make_train_step(model: Model, oc: OptConfig, ctx: ParallelCtx,
     return init_opt, train_step
 
 
-def make_eval_step(model: Model, ctx: ParallelCtx):
+def make_eval_step(model: Model, ctx: ParallelCtx,
+                   backend: Optional[str] = None):
+    model = _pin_backend(model, backend)
     cdt = jnp.dtype(model.cfg.dtype)
 
     def eval_step(params, batch):

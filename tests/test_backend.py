@@ -1,0 +1,233 @@
+"""Backend registry: selection precedence, batched qmatmul fwd+grad vs the
+exact oracle, fused-epilogue parity between jnp and pallas-interpret, and
+the memoized LUT caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as be
+from repro.core import float_approx as fa
+from repro.core.ops import qdiv, qmatmul, qmatmul_batched
+
+
+# --------------------------------------------------------------------------
+# registry + selection
+# --------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    names = be.available_backends()
+    for expected in ("jnp", "pallas", "pallas-interpret"):
+        assert expected in names
+
+
+def test_resolution_precedence(monkeypatch):
+    # baseline: CPU autodetect -> jnp
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    be.set_default_backend(None)
+    assert be.resolve_backend_name(None) == "jnp"
+    assert be.resolve_backend_name("auto") == "jnp"
+    # process default beats autodetect
+    be.set_default_backend("pallas-interpret")
+    try:
+        assert be.resolve_backend_name(None) == "pallas-interpret"
+        # env var beats process default
+        monkeypatch.setenv(be.ENV_VAR, "pallas")
+        assert be.resolve_backend_name(None) == "pallas"
+        # explicit argument beats everything
+        assert be.resolve_backend_name("jnp") == "jnp"
+    finally:
+        be.set_default_backend(None)
+
+
+def test_unknown_backend_raises(monkeypatch):
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    with pytest.raises(KeyError):
+        be.resolve_backend_name("not-a-backend")
+    monkeypatch.setenv(be.ENV_VAR, "not-a-backend")
+    with pytest.raises(KeyError):
+        be.resolve_backend_name(None)
+
+
+def test_register_backend_no_silent_overwrite():
+    jnp_backend = be.get_backend("jnp")
+    with pytest.raises(ValueError):
+        be.register_backend(jnp_backend)
+
+
+def test_qdiv_routes_through_registry():
+    a = jnp.asarray([3.0, 10.0], jnp.float32)
+    b = jnp.asarray([2.0, 4.0], jnp.float32)
+    got = qdiv(a, b, "rapid9", backend="jnp")
+    want = fa.approx_div(a, b, "rapid9")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# LUT memoization
+# --------------------------------------------------------------------------
+
+def test_host_lut_memoized_and_readonly():
+    l1 = fa.mul_lut("rapid10")
+    l2 = fa.mul_lut("rapid10")
+    assert l1 is l2
+    assert not l1.flags.writeable
+    assert fa.div_lut("rapid9") is fa.div_lut("rapid9")
+
+
+def test_device_lut_usable_after_first_call_under_jit():
+    """Regression: the memoized device LUT must stay concrete even when
+    the cache is first populated inside a jit trace (no tracer leak)."""
+    fa._lut_device.cache_clear()
+    a = jnp.float32(3.0)
+    b = jnp.float32(5.0)
+    jitted = jax.jit(lambda a, b: fa.approx_mul(a, b, "rapid5"))(a, b)
+    eager = fa.approx_mul(a, b, "rapid5")  # would raise on a leaked tracer
+    np.testing.assert_array_equal(np.asarray(jitted), np.asarray(eager))
+
+
+def test_device_lut_memoized_per_scheme_and_dtype():
+    d1 = fa.mul_lut_device("rapid10")
+    d2 = fa.mul_lut_device("rapid10")
+    assert d1 is d2  # one upload ever per (scheme, dtype)
+    assert fa.mul_lut_device("rapid3") is not d1
+    assert fa.div_lut_device("rapid9") is fa.div_lut_device("rapid9")
+    np.testing.assert_array_equal(np.asarray(d1), fa.mul_lut("rapid10"))
+
+
+# --------------------------------------------------------------------------
+# batched qmatmul: forward + gradient vs the exact oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("xshape,wshape", [
+    ((5, 32), (32, 16)),            # plain 2-D
+    ((2, 3, 32), (32, 16)),         # leading batch dims on x
+    ((5, 32), (32, 4, 8)),          # trailing weight dims (K, H, D)
+    ((2, 3, 32), (32, 4, 8)),       # both
+])
+def test_batched_qmatmul_forward_matches_exact_within_pre(xshape, wshape, rng):
+    x = jnp.asarray(rng.normal(size=xshape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=wshape), jnp.float32)
+    got = qmatmul(x, w, "rapid10", backend="jnp")
+    want = qmatmul(x, w, None)
+    assert got.shape == want.shape == xshape[:-1] + wshape[1:]
+    rel = float(jnp.abs(got - want).mean() / jnp.abs(want).mean())
+    assert rel < 0.05  # aggregation keeps error near the elementwise PRE
+
+
+def test_batched_qmatmul_grad_shapes_and_values_match_exact(rng):
+    """w.ndim > 2: gradient shapes equal the exact path's, and the
+    straight-through cotangents equal the exact matmul's cotangents."""
+    x = jnp.asarray(rng.normal(size=(2, 3, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 4, 6)), jnp.float32)
+    ct = jnp.asarray(rng.normal(size=(2, 3, 4, 6)), jnp.float32)
+
+    def approx_loss(x, w):
+        return (qmatmul(x, w, "rapid10", backend="jnp") * ct).sum()
+
+    def exact_loss(x, w):
+        return (qmatmul(x, w, None) * ct).sum()
+
+    gx_a, gw_a = jax.grad(approx_loss, argnums=(0, 1))(x, w)
+    gx_e, gw_e = jax.grad(exact_loss, argnums=(0, 1))(x, w)
+    assert gx_a.shape == x.shape and gw_a.shape == w.shape
+    np.testing.assert_allclose(np.asarray(gx_a), np.asarray(gx_e),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gw_a), np.asarray(gw_e),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_epilogue_grads_match_exact_fused(rng):
+    """bias+activation: backward differentiates the activation at the
+    exact pre-activation, so grads equal the exact fused path's."""
+    x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 4, 6)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+
+    def approx_loss(x, w, b):
+        return qmatmul(x, w, "rapid10", backend="jnp",
+                       bias=b, activation="silu").sum()
+
+    def exact_loss(x, w, b):
+        return qmatmul(x, w, None, bias=b, activation="silu").sum()
+
+    ga = jax.grad(approx_loss, argnums=(0, 1, 2))(x, w, b)
+    ge = jax.grad(exact_loss, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(ga, ge):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_qmatmul_batched_shared_leading_dims_vs_per_expert_loop(rng):
+    """The MoE contraction: [E, C, K] @ [E, K, N] via one vmapped path."""
+    x = jnp.asarray(rng.normal(size=(4, 5, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 16, 12)), jnp.float32)
+    got = qmatmul_batched(x, w, "rapid10", backend="jnp")
+    ref = jnp.stack([qmatmul(x[i], w[i], "rapid10", backend="jnp")
+                     for i in range(4)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # and it differentiates (the vmapped custom_vjp)
+    gx, gw = jax.grad(
+        lambda x, w: qmatmul_batched(x, w, "rapid10", backend="jnp").sum(),
+        argnums=(0, 1))(x, w)
+    assert gx.shape == x.shape and gw.shape == w.shape
+
+
+def test_qmatmul_batched_shared_bias_broadcasts(rng):
+    """A shared [N] bias broadcasts over the batch; per-batch [E, N]
+    bias maps; anything else raises."""
+    x = jnp.asarray(rng.normal(size=(3, 5, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 16, 12)), jnp.float32)
+    b_shared = jnp.asarray(rng.normal(size=(12,)), jnp.float32)
+    b_per = jnp.broadcast_to(b_shared, (3, 12))
+    got_shared = qmatmul_batched(x, w, "rapid10", backend="jnp", bias=b_shared)
+    got_per = qmatmul_batched(x, w, "rapid10", backend="jnp", bias=b_per)
+    np.testing.assert_array_equal(np.asarray(got_shared), np.asarray(got_per))
+    ref = jnp.stack([qmatmul(x[i], w[i], "rapid10", backend="jnp",
+                             bias=b_shared) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got_shared), np.asarray(ref))
+    with pytest.raises(ValueError):
+        qmatmul_batched(x, w, "rapid10", bias=jnp.zeros((5,), jnp.float32))
+
+
+def test_bias_shape_validated(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)
+    with pytest.raises(ValueError):
+        qmatmul(x, w, None, bias=jnp.zeros((5,), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# fused-epilogue kernel in interpret mode: bit-for-bit vs the jnp backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("activation", [None, "relu", "silu", "gelu_erf"])
+def test_fused_epilogue_jnp_vs_pallas_interpret_bitexact(activation, rng):
+    """chunk=1 makes the jnp scan accumulate in the kernel's slab order,
+    so the two backends must agree bit-for-bit (single K block).  gelu's
+    tanh form is excluded: its mul/add chain FMA-fuses differently inside
+    a pallas_call (use gelu_erf for bit-stable fusion)."""
+    x = jnp.asarray(rng.normal(size=(2, 3, 40)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(40, 6, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    o_jnp = qmatmul(x, w, "rapid10", chunk=1, backend="jnp",
+                    bias=b, activation=activation)
+    o_pal = qmatmul(x, w, "rapid10", backend="pallas-interpret",
+                    bias=b, activation=activation)
+    np.testing.assert_array_equal(
+        np.asarray(o_jnp).view(np.int32), np.asarray(o_pal).view(np.int32))
+
+
+def test_fused_epilogue_kernel_interpret_vs_reference(rng):
+    """The kernel's fused activation(out+bias) equals epilogue-after-
+    matmul applied to the kernel's own unfused output."""
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    x = jnp.asarray(rng.normal(size=(16, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(96, 24)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(24,)), jnp.float32)
+    raw = log_matmul(x, w, "rapid10", interpret=True)
+    fused = log_matmul(x, w, "rapid10", bias=b, activation="silu",
+                       interpret=True)
+    want = be.apply_epilogue(raw, b, "silu")
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))

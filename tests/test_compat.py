@@ -1,0 +1,98 @@
+"""The jax-version compat shim: both shard_map signatures, monkeypatched,
+plus the real resolution on the installed jax."""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+
+
+def _capture(calls):
+    """A fake shard_map core that records how it was invoked."""
+
+    def run(f, **kwargs):
+        calls.append(kwargs)
+        return f
+
+    return run
+
+
+def test_adapt_maps_check_vma_to_check_rep():
+    calls = []
+    run = _capture(calls)
+
+    def legacy(f, *, mesh, in_specs, out_specs, check_rep=True):  # jax 0.4.x
+        return run(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep)
+
+    wrapped = compat.adapt_shard_map(legacy)
+    body = lambda x: x  # noqa: E731
+    out = wrapped(body, mesh="MESH", in_specs=("i",), out_specs="o",
+                  check_vma=False)
+    assert out is body
+    assert calls == [{"mesh": "MESH", "in_specs": ("i",), "out_specs": "o",
+                      "check_rep": False}]
+
+
+def test_adapt_passes_check_vma_through_on_modern_jax():
+    calls = []
+    run = _capture(calls)
+
+    def modern(f, *, mesh, in_specs, out_specs, check_vma=True):  # jax 0.8+
+        return run(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
+
+    wrapped = compat.adapt_shard_map(modern)
+    wrapped(lambda x: x, mesh="M", in_specs="i", out_specs="o", check_vma=False)
+    assert calls[0]["check_vma"] is False
+
+
+def test_adapt_drops_flag_when_impl_has_neither_kwarg():
+    calls = []
+    run = _capture(calls)
+
+    def bare(f, *, mesh, in_specs, out_specs):
+        return run(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+    wrapped = compat.adapt_shard_map(bare)
+    wrapped(lambda x: x, mesh="M", in_specs="i", out_specs="o", check_vma=False)
+    assert "check_rep" not in calls[0] and "check_vma" not in calls[0]
+
+
+def test_adapt_omits_flag_when_unset():
+    calls = []
+    run = _capture(calls)
+
+    def legacy(f, *, mesh, in_specs, out_specs, **kw):
+        return run(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    wrapped = compat.adapt_shard_map(legacy)
+    wrapped(lambda x: x, mesh="M", in_specs="i", out_specs="o")
+    assert "check_rep" not in calls[0] and "check_vma" not in calls[0]
+
+
+def test_resolve_finds_installed_shard_map():
+    impl = compat.resolve_shard_map()
+    assert callable(impl)
+    params = inspect.signature(impl).parameters
+    # whichever jax this is, the shim must know its check kwarg (or lack)
+    assert compat._check_kwarg_name(impl) in ("check_vma", "check_rep", None)
+
+
+def test_shard_map_executes_on_installed_jax():
+    """End-to-end: the shim actually runs a shard_map on a 1-device mesh."""
+    from jax.sharding import PartitionSpec
+
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jnp.arange(8, dtype=jnp.float32)
+    out = compat.shard_map(
+        lambda v: v * 2.0,
+        mesh=mesh,
+        in_specs=PartitionSpec("d"),
+        out_specs=PartitionSpec("d"),
+        check_vma=False,
+    )(x)
+    np.testing.assert_allclose(np.asarray(out), np.arange(8) * 2.0)

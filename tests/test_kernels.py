@@ -1,9 +1,21 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype/scheme sweeps +
-hypothesis property tests (interpret=True on CPU)."""
+property tests (interpret=True on CPU).
+
+The property tests prefer ``hypothesis`` when it is installed; hermetic
+environments without it fall back to seeded ``np.random`` sampling of the
+same input domains, so tier-1 runs fully offline (the hypothesis-backed
+variants carry the ``hypothesis`` pytest marker).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dependency: absent in hermetic environments
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import schemes as S
 from repro.core.mitchell import mitchell_div_np, mitchell_mul_np
@@ -72,9 +84,12 @@ def test_log_matmul_error_bound(rng):
     assert rel < 0.037  # well under the elementwise PRE
 
 
-@settings(max_examples=200, deadline=None)
-@given(a=st.integers(0, 2**16 - 1), b=st.integers(0, 2**16 - 1))
-def test_prop_mul_within_pre_bound(a, b):
+# --------------------------------------------------------------------------
+# property tests: hypothesis when available, seeded np.random fallback.
+# The check bodies are shared; only the input generation differs.
+# --------------------------------------------------------------------------
+
+def _check_mul_within_pre_bound(a: int, b: int):
     """Property: every 16-bit product is within the scheme PRE of exact."""
     out = float(mitchell_mul_np(np.asarray([a]), np.asarray([b]),
                                 S.RAPID10_MUL, 16, quantize=False)[0])
@@ -84,9 +99,7 @@ def test_prop_mul_within_pre_bound(a, b):
         assert abs(out / (a * b) - 1.0) < 0.037
 
 
-@settings(max_examples=200, deadline=None)
-@given(a=st.integers(0, 2**16 - 1), b=st.integers(1, 2**8 - 1))
-def test_prop_div_within_pre_bound(a, b):
+def _check_div_within_pre_bound(a: int, b: int):
     out = float(mitchell_div_np(np.asarray([a]), np.asarray([b]),
                                 S.RAPID9_DIV, 8, quantize=False)[0])
     if a == 0:
@@ -95,9 +108,7 @@ def test_prop_div_within_pre_bound(a, b):
         assert abs(out / (a / b) - 1.0) < 0.035
 
 
-@settings(max_examples=100, deadline=None)
-@given(st.floats(1e-20, 1e20), st.floats(1e-20, 1e20))
-def test_prop_float_mul_scale_invariant(x, y):
+def _check_float_mul_scale_invariant(x: float, y: float):
     """Relative error depends only on mantissas, not exponents."""
     a = np.float32(x)
     b = np.float32(y)
@@ -107,3 +118,46 @@ def test_prop_float_mul_scale_invariant(x, y):
     r2 = float(fa.approx_mul(jnp.float32(a * 4), jnp.float32(b / 2), "rapid5"))
     if np.isfinite(r1) and np.isfinite(r2) and r1 > 0:
         np.testing.assert_allclose(r2 / r1, 2.0, rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(a=st.integers(0, 2**16 - 1), b=st.integers(0, 2**16 - 1))
+    def test_prop_mul_within_pre_bound(a, b):
+        _check_mul_within_pre_bound(a, b)
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(a=st.integers(0, 2**16 - 1), b=st.integers(1, 2**8 - 1))
+    def test_prop_div_within_pre_bound(a, b):
+        _check_div_within_pre_bound(a, b)
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(1e-20, 1e20), st.floats(1e-20, 1e20))
+    def test_prop_float_mul_scale_invariant(x, y):
+        _check_float_mul_scale_invariant(x, y)
+
+else:
+
+    def test_prop_mul_within_pre_bound():
+        r = np.random.default_rng(1234)
+        pairs = r.integers(0, 1 << 16, size=(200, 2))
+        for a, b in np.vstack([pairs, [[0, 7], [7, 0], [0, 0]]]):
+            _check_mul_within_pre_bound(int(a), int(b))
+
+    def test_prop_div_within_pre_bound():
+        r = np.random.default_rng(1234)
+        a = r.integers(0, 1 << 16, size=200)
+        b = r.integers(1, 1 << 8, size=200)
+        _check_div_within_pre_bound(0, 3)
+        for ai, bi in zip(a, b):
+            _check_div_within_pre_bound(int(ai), int(bi))
+
+    def test_prop_float_mul_scale_invariant():
+        r = np.random.default_rng(1234)
+        exps = r.uniform(-20, 20, size=(100, 2))
+        for ex, ey in exps:
+            _check_float_mul_scale_invariant(10.0 ** ex, 10.0 ** ey)
