@@ -1,0 +1,81 @@
+"""Fused-divider micro-benchmark: one pass vs reduce+divide round-trips.
+
+Measures the registry's divider family on the shapes that dominate the
+serving path — the decode-softmax combine (exp-weights / row-sum over
+the KV length) and the model-zoo norms (d_model rows) — comparing
+
+  * ``unfused``  — the pre-fusion composition: a separate row reduction
+    (sum / mean+sqrt) materialised between two elementwise launches,
+    with the RAPID divide bolted on (``qdiv``);
+  * ``fused``    — the registry op (``qsoftmax_div`` / ``qrms_div``):
+    denominator reduction and divide in one pass (one Pallas kernel
+    launch on TPU; on this host the jnp formulation, so the wall-time
+    delta is a lower bound — the HBM round-trip it removes only exists
+    on the real accelerator).
+
+The resolved backend name is reported so CI logs show which execution
+path RAPID_BACKEND / autodetect picked.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as be
+from repro.core.ops import qdiv, qrms_div, qsoftmax_div
+
+# (label, rows, width): decode softmax at 4k/32k KV, norm at 4k d_model
+SHAPES = [
+    ("softmax_decode_4k", 128 * 32, 4096),
+    ("softmax_decode_32k", 128, 32768),
+    ("rms_norm_4k_dmodel", 4096, 4096),
+]
+
+
+def _bench(fn, *args, iters: int = 10) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bk = be.resolve_backend_name(None)
+    # the interpreter is a correctness path, not a speed path: per-op
+    # python dispatch makes full-size rows take minutes — shrink 16x
+    shrink = 16 if bk == "pallas-interpret" else 1
+    rows = []
+    for label, m, n in SHAPES:
+        m = max(8, m // shrink)
+        n = max(128, n // shrink)
+        x = jnp.asarray(np.abs(rng.normal(size=(m, n))) + 1e-3, jnp.float32)
+        if label.startswith("softmax"):
+            unfused = jax.jit(lambda e: qdiv(
+                e, jnp.maximum(e.sum(-1, keepdims=True), 1e-20), "rapid9",
+                backend=bk))
+            fused = jax.jit(lambda e: qsoftmax_div(e, "rapid9", bk))
+        else:
+            unfused = jax.jit(lambda x: qdiv(
+                x, jnp.sqrt(jnp.mean(jnp.square(x), -1, keepdims=True)
+                            + 1e-6), "rapid9", backend=bk))
+            fused = jax.jit(lambda x: qrms_div(x, 1e-6, "rapid9", bk))
+        t_un = _bench(unfused, x)
+        t_fu = _bench(fused, x)
+        rows.append((f"{label}[{bk}]", t_un, t_fu))
+    return rows
+
+
+def main():
+    print("name,unfused_us,fused_us,speedup")
+    for name, t_un, t_fu in run():
+        print(f"{name},{t_un:.1f},{t_fu:.1f},{t_un / t_fu:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 
   table3_accuracy    Table III accuracy columns (ARE/PRE/bias, all widths)
   table3_throughput  Table III throughput columns (CPU proxy + op costs)
+  fused_div          fused divider family vs reduce+divide round-trips
   apps_qor           Figs. 8-10 end-to-end application QoR
   e2e_train          trainability of RAPID arithmetic (loss curves)
   roofline_report    SSRoofline table from the dry-run artifacts
@@ -13,8 +14,8 @@ from __future__ import annotations
 import sys
 import time
 
-ALL = ["table3_accuracy", "table3_throughput", "apps_qor", "e2e_train",
-       "roofline_report"]
+ALL = ["table3_accuracy", "table3_throughput", "fused_div", "apps_qor",
+       "e2e_train", "roofline_report"]
 
 
 def main(names=None) -> int:

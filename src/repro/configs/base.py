@@ -46,10 +46,13 @@ class ApproxConfig:
     # which divisions route through the logarithmic divider
     on_softmax: bool = True
     on_norm: bool = True
-    # backend-registry name (repro.core.backend): "auto" resolves via
+    # backend-registry name (repro.core.backend) for EVERY routed op —
+    # matmuls and the whole divider family alike: "auto" resolves via
     # env var / process default / hardware autodetect; or pin one of
-    # "jnp" | "pallas" | "pallas-interpret" explicitly.
-    matmul_backend: str = "auto"
+    # "jnp" | "pallas" | "pallas-interpret" explicitly.  A backend
+    # pinned at engine/trainstep build (ModelConfig.with_backend)
+    # therefore reaches every divide site, not just the matmuls.
+    backend: str = "auto"
 
     @property
     def active(self) -> bool:
@@ -67,6 +70,12 @@ class ApproxConfig:
         if self.div_scheme in (None, "exact"):
             return None
         return self.div_scheme if getattr(self, f"on_{site}") else None
+
+    @property
+    def matmul_backend(self) -> str:
+        """Read-only alias from before the divider family shared the
+        pin; construct/replace with ``backend=`` (the real field)."""
+        return self.backend
 
 
 EXACT = ApproxConfig()
@@ -134,7 +143,7 @@ class ModelConfig:
     def with_backend(self, backend: str) -> "ModelConfig":
         """Pin the approximate-arithmetic backend (registry name)."""
         return self.with_(
-            approx=dataclasses.replace(self.approx, matmul_backend=backend))
+            approx=dataclasses.replace(self.approx, backend=backend))
 
     def reduced(self) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests."""

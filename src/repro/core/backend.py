@@ -6,25 +6,32 @@ multi-kernel applications; this module is the software analogue: every
 layer instead of hand-picking between the jnp scan formulation, the
 Pallas TPU kernel, and the elementwise float ops.
 
-A backend bundles two entry points:
+A backend bundles four entry points:
 
   * ``matmul(x2, w2, scheme, *, chunk, bias, activation)`` — 2-D
     ``[M, K] @ [K, N]`` approximate contraction in f32, with an optional
     fused ``activation(out + bias)`` epilogue;
-  * ``div(a, b, scheme)`` — elementwise approximate divide.
+  * ``div(a, b, scheme)`` — elementwise approximate divide;
+  * ``softmax_div(e, scheme, *, floor)`` — softmax combine:
+    ``e / max(sum(e, -1), floor)``, denominator reduction + RAPID divide
+    fused in one pass;
+  * ``rms_div(x, eps, scheme)`` — rms normalize:
+    ``x / sqrt(mean(x^2, -1) + eps)``, likewise fused.
 
 Built-in backends:
 
   * ``jnp``              — chunked pure-jnp scan (partitioner-visible;
                            the oracle the kernels are tested against);
-  * ``pallas``           — the TPU kernel in ``repro.kernels.log_matmul``
-                           (VMEM tiled, grid-pipelined);
-  * ``pallas-interpret`` — same kernel under the Pallas interpreter
+  * ``pallas``           — the TPU kernels in ``repro.kernels`` (VMEM
+                           tiled; ``log_matmul`` for matmuls,
+                           ``fused_div`` for the divider family);
+  * ``pallas-interpret`` — same kernels under the Pallas interpreter
                            (CPU debugging / CI parity checks).
 
-Elementwise divides are VPU-native already (int sub + 256-gather), so
-every built-in backend shares the ``float_approx`` implementation for
-``div``; a future fused-softmax kernel can override it per backend.
+The divider family shares canonical semantics with the fused kernels
+(``repro.kernels.fused_div.ref``): the denominator reduction runs over
+the 128-lane-padded row on every backend, so ``jnp`` and
+``pallas-interpret`` agree bit-for-bit.
 
 Selection (``resolve_backend_name``) is one function with a strict
 precedence: explicit argument > ``RAPID_BACKEND`` env var > process
@@ -43,11 +50,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import float_approx as fa
+from repro.kernels.fused_div import ref as fdref
 
 __all__ = [
     "Backend",
     "ENV_VAR",
     "ACTIVATIONS",
+    "SOFTMAX_FLOOR",
     "normalize_activation",
     "apply_epilogue",
     "register_backend",
@@ -57,9 +66,15 @@ __all__ = [
     "set_default_backend",
     "matmul",
     "div",
+    "softmax_div",
+    "rms_div",
 ]
 
 ENV_VAR = "RAPID_BACKEND"
+
+# Default softmax-combine denominator floor (re-exported from the fused
+# kernels' canonical-semantics module).
+SOFTMAX_FLOOR = fdref.SOFTMAX_FLOOR
 
 # Fused-epilogue activations.  Keep this table tiny and shared: the Pallas
 # kernel applies the *same* jnp function inside the kernel body.  "gelu"
@@ -164,6 +179,53 @@ def _matmul_pallas_interpret(x2, w2, scheme, **kw):
 
 
 # --------------------------------------------------------------------------
+# divider family: elementwise div, fused softmax combine, fused rms
+# normalize.  The jnp implementations ARE the canonical semantics (the
+# fused kernels evaluate the same expressions on their VMEM tiles).
+# --------------------------------------------------------------------------
+
+def _softmax_div_jnp(e, scheme, *, floor=SOFTMAX_FLOOR):
+    """e / max(sum(e, -1), floor) with the RAPID divider.  f32 in/out."""
+    return fdref.softmax_div_ref(e, fa.div_lut_device(scheme), floor)
+
+
+def _rms_div_jnp(x, eps, scheme):
+    """x / sqrt(mean(x^2, -1) + eps) with the RAPID divider.  f32."""
+    return fdref.rms_div_ref(x, fa.div_lut_device(scheme), eps)
+
+
+def _div_pallas(a, b, scheme, *, interpret: Optional[bool] = None):
+    from repro.kernels.fused_div.ops import fused_elementwise_div
+
+    return fused_elementwise_div(a, b, scheme, interpret=interpret)
+
+
+def _div_pallas_interpret(a, b, scheme):
+    return _div_pallas(a, b, scheme, interpret=True)
+
+
+def _softmax_div_pallas(e, scheme, *, floor=SOFTMAX_FLOOR,
+                        interpret: Optional[bool] = None):
+    from repro.kernels.fused_div.ops import fused_softmax_div
+
+    return fused_softmax_div(e, scheme, floor=floor, interpret=interpret)
+
+
+def _softmax_div_pallas_interpret(e, scheme, *, floor=SOFTMAX_FLOOR):
+    return _softmax_div_pallas(e, scheme, floor=floor, interpret=True)
+
+
+def _rms_div_pallas(x, eps, scheme, *, interpret: Optional[bool] = None):
+    from repro.kernels.fused_div.ops import fused_rms_div
+
+    return fused_rms_div(x, eps, scheme, interpret=interpret)
+
+
+def _rms_div_pallas_interpret(x, eps, scheme):
+    return _rms_div_pallas(x, eps, scheme, interpret=True)
+
+
+# --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
 
@@ -174,6 +236,8 @@ class Backend:
     name: str
     matmul: Callable
     div: Callable = field(default=fa.approx_div)
+    softmax_div: Callable = field(default=_softmax_div_jnp)
+    rms_div: Callable = field(default=_rms_div_jnp)
     description: str = ""
 
 
@@ -249,12 +313,29 @@ def div(a, b, scheme, *, backend: Optional[str] = None):
     return get_backend(backend).div(a, b, scheme)
 
 
+def softmax_div(e, scheme, *, backend: Optional[str] = None,
+                floor: float = SOFTMAX_FLOOR):
+    """Registry-routed fused softmax combine (see Backend.softmax_div)."""
+    return get_backend(backend).softmax_div(e, scheme, floor=floor)
+
+
+def rms_div(x, eps, scheme, *, backend: Optional[str] = None):
+    """Registry-routed fused rms normalize (see Backend.rms_div)."""
+    return get_backend(backend).rms_div(x, eps, scheme)
+
+
 register_backend(Backend(
     "jnp", _matmul_jnp,
     description="chunked jnp scan; GSPMD-partitionable oracle"))
 register_backend(Backend(
     "pallas", _matmul_pallas,
-    description="Pallas TPU kernel (VMEM tiled, grid-pipelined)"))
+    div=_div_pallas,
+    softmax_div=_softmax_div_pallas,
+    rms_div=_rms_div_pallas,
+    description="Pallas TPU kernels (VMEM tiled, grid-pipelined)"))
 register_backend(Backend(
     "pallas-interpret", _matmul_pallas_interpret,
-    description="Pallas kernel under the interpreter (CPU debug/CI)"))
+    div=_div_pallas_interpret,
+    softmax_div=_softmax_div_pallas_interpret,
+    rms_div=_rms_div_pallas_interpret,
+    description="Pallas kernels under the interpreter (CPU debug/CI)"))

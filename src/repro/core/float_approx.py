@@ -27,14 +27,14 @@ quantisation at 2^-23 instead of the integer fraction width.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mitchell, schemes
 from repro.core.mitchell import ErrorScheme
-from repro.core import schemes
 
 __all__ = [
     "mul_lut",
@@ -56,31 +56,18 @@ _MIN_NORMAL = np.int32(0x00800000)
 _INF_BITS = np.int32(0x7F800000)
 
 
-@lru_cache(maxsize=None)
 def _lut_host(kind: str, scheme: ErrorScheme) -> np.ndarray:
-    """Memoized (256,) int32 host LUT for one (kind, scheme) pair.
-
-    Building the table walks the 16x16 assignment grid in python/numpy —
-    cheap once, but the decode hot path used to redo it (plus a fresh
-    host->device upload) on *every* call site.  The returned array is
-    marked read-only because it is shared across callers.
-    """
+    """Memoized read-only (256,) int32 host LUT at the f32 fraction width
+    (shared build/cache machinery: ``repro.core.mitchell.lut_host``)."""
     assert scheme.kind == kind
-    lut = scheme.lut(_F32_FRAC).astype(np.int32)
-    lut.setflags(write=False)
-    return lut
+    return mitchell.lut_host(scheme, _F32_FRAC)
 
 
-@lru_cache(maxsize=None)
 def _lut_device(kind: str, scheme: ErrorScheme, dtype: str):
-    """Memoized on-device LUT per (kind, scheme, dtype): one upload ever.
-
-    ensure_compile_time_eval keeps the cached value a *concrete* device
-    array even when the first call happens inside a jit trace — without
-    it the cache would capture (and leak) a tracer.
-    """
-    with jax.ensure_compile_time_eval():
-        return jnp.asarray(_lut_host(kind, scheme), jnp.dtype(dtype))
+    """Memoized on-device LUT per (scheme, dtype): one upload ever
+    (shared machinery: ``repro.core.mitchell.lut_device``)."""
+    assert scheme.kind == kind
+    return mitchell.lut_device(scheme, _F32_FRAC, dtype)
 
 
 def _as_scheme(kind: str, scheme: ErrorScheme | str) -> ErrorScheme:

@@ -22,8 +22,10 @@ All shifts truncate (match the hardware barrel shifter).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Literal
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,6 +35,8 @@ __all__ = [
     "ErrorScheme",
     "MITCHELL_MUL",
     "MITCHELL_DIV",
+    "lut_host",
+    "lut_device",
     "mitchell_mul_np",
     "mitchell_div_np",
     "mitchell_mul",
@@ -70,6 +74,37 @@ class ErrorScheme:
 _ZERO_ASSIGN = tuple(tuple(0 for _ in range(16)) for _ in range(16))
 MITCHELL_MUL = ErrorScheme("mitchell", "mul", _ZERO_ASSIGN, (0.0,))
 MITCHELL_DIV = ErrorScheme("mitchell", "div", _ZERO_ASSIGN, (0.0,))
+
+
+# --------------------------------------------------------------------------
+# the single memoized LUT build/upload path — every consumer (float_approx
+# at the f32 fraction width, the integer kernels at theirs) delegates
+# here so there is exactly one cache implementation in the repo.
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def lut_host(scheme: ErrorScheme, frac_bits: int) -> np.ndarray:
+    """Memoized read-only (256,) int32 host LUT per (scheme, width).
+
+    Building the table walks the 16x16 assignment grid in python/numpy —
+    cheap once, but hot paths used to redo it per call.  Read-only
+    because the array is shared across callers.
+    """
+    lut = scheme.lut(frac_bits).astype(np.int32)
+    lut.setflags(write=False)
+    return lut
+
+
+@lru_cache(maxsize=None)
+def lut_device(scheme: ErrorScheme, frac_bits: int, dtype: str = "int32"):
+    """Memoized on-device LUT per (scheme, width, dtype): one upload ever.
+
+    ensure_compile_time_eval keeps the cached value a *concrete* device
+    array even when the first call happens inside a jit trace — without
+    it the cache would capture (and leak) a tracer.
+    """
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(lut_host(scheme, frac_bits), jnp.dtype(dtype))
 
 
 # --------------------------------------------------------------------------

@@ -27,6 +27,28 @@ with strict precedence:
 so models/configs can stay backend-agnostic and the launcher (or an env
 var in CI) picks the execution path.
 
+Divider registry entries
+------------------------
+Every divide routes through one of three registry families (all with
+``jnp`` / ``pallas`` / ``pallas-interpret`` implementations, bit-exact
+between ``jnp`` and ``pallas-interpret``):
+
+  * ``div``         — elementwise ``a / b`` (:func:`qdiv`): the online-
+                      softmax combine, whose denominator comes from the
+                      blockwise/flash-decode scan;
+  * ``softmax_div`` — fused softmax combine (:func:`qsoftmax_div`):
+                      ``e / max(sum(e, -1), floor)`` with the row-sum
+                      reduction and the RAPID divide in one VMEM pass;
+  * ``rms_div``     — fused rms normalize (:func:`qrms_div`):
+                      ``x / sqrt(mean(x^2, -1) + eps)`` likewise fused.
+
+On the ``pallas`` backend these are the ``repro.kernels.fused_div``
+kernels, so a decode softmax or model-zoo norm is one kernel launch
+instead of separate reduce / sqrt / divide round-trips through HBM.
+The canonical denominator semantics (reduction over the 128-lane-padded
+row) live in ``repro.kernels.fused_div.ref`` and are shared verbatim by
+the jnp oracle and the kernel bodies.
+
 Batched operation
 -----------------
 ``qmatmul`` contracts the last dim of ``x`` with the first dim of ``w``
@@ -63,6 +85,8 @@ __all__ = [
     "qmatmul_batched",
     "qeinsum_mk_kn",
     "qdiv",
+    "qsoftmax_div",
+    "qrms_div",
     "approx_softmax",
     "approx_rms_normalize",
     "approx_mean",
@@ -214,44 +238,147 @@ def qdiv(
     scheme: str,
     backend: Optional[str] = None,
 ) -> jnp.ndarray:
-    """Registry-routed elementwise approximate divide (broadcasting ok)."""
+    """Registry-routed elementwise approximate divide (broadcasting ok).
+
+    The backend resolves here — once, before the custom_jvp — so a
+    backend pinned at engine/trainstep build time cannot be re-resolved
+    from env/default inside a later trace.  Straight-through gradients:
+    the backward pass differentiates the ideal quotient.
+    """
+    backend = be.resolve_backend_name(backend)
+    return _qdiv_approx(a, b, scheme, backend)
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(2, 3))
+def _qdiv_approx(a, b, scheme, backend):
     return be.div(a, b, scheme, backend=backend)
 
 
+@_qdiv_approx.defjvp
+def _qdiv_jvp(scheme, backend, primals, tangents):
+    a, b = primals
+    da, db = tangents
+    out = _qdiv_approx(a, b, scheme, backend)
+    return out, (da * b - a * db) / (b * b)
+
+
+def qsoftmax_div(
+    e: jnp.ndarray,
+    scheme: Optional[str],
+    backend: Optional[str] = None,
+    *,
+    floor: float = be.SOFTMAX_FLOOR,
+    axis: int = -1,
+) -> jnp.ndarray:
+    """Fused softmax combine: ``e / max(sum(e, axis), floor)``.
+
+    ``e`` holds non-negative exp-weights; on the ``pallas`` backend the
+    row-sum reduction and the RAPID divide run in one VMEM-resident
+    kernel pass (registry family ``softmax_div``).  The floor keeps
+    fully-masked rows (all weights zero) from dividing by zero.
+    """
+    if axis not in (-1, e.ndim - 1):
+        out = qsoftmax_div(jnp.moveaxis(e, axis, -1), scheme, backend,
+                           floor=floor)
+        return jnp.moveaxis(out, -1, axis)
+    if scheme in (None, "exact"):
+        ef = e.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(ef, axis=-1, keepdims=True), floor)
+        return (ef / denom).astype(e.dtype)
+    backend = be.resolve_backend_name(backend)
+    return _qsoftmax_div_approx(e, scheme, backend, float(floor))
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(1, 2, 3))
+def _qsoftmax_div_approx(e, scheme, backend, floor):
+    out = be.softmax_div(e.astype(jnp.float32), scheme, backend=backend,
+                         floor=floor)
+    return out.astype(e.dtype)
+
+
+@_qsoftmax_div_approx.defjvp
+def _qsoftmax_div_jvp(scheme, backend, floor, primals, tangents):
+    # straight-through: differentiate the ideal fused expression
+    (e,), (de,) = primals, tangents
+    exact = lambda e: e / jnp.maximum(  # noqa: E731
+        jnp.sum(e, axis=-1, keepdims=True), floor)
+    _, tangent = jax.jvp(exact, (e,), (de,))
+    return _qsoftmax_div_approx(e, scheme, backend, floor), tangent
+
+
+def qrms_div(
+    x: jnp.ndarray,
+    eps: float,
+    scheme: Optional[str],
+    backend: Optional[str] = None,
+) -> jnp.ndarray:
+    """Fused rms normalize: ``x / sqrt(mean(x^2, -1) + eps)``.
+
+    On the ``pallas`` backend the mean-of-squares reduction, the sqrt
+    and the RAPID divide run in one VMEM-resident kernel pass (registry
+    family ``rms_div``) — a model-zoo norm stops round-tripping HBM
+    between its reduction and its divide.
+    """
+    if scheme in (None, "exact"):
+        xf = x.astype(jnp.float32)
+        denom = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        return (xf / denom).astype(x.dtype)
+    backend = be.resolve_backend_name(backend)
+    return _qrms_div_approx(x, float(eps), scheme, backend)
+
+
+@partial(jax.custom_jvp, nondiff_argnums=(1, 2, 3))
+def _qrms_div_approx(x, eps, scheme, backend):
+    out = be.rms_div(x.astype(jnp.float32), eps, scheme, backend=backend)
+    return out.astype(x.dtype)
+
+
+@_qrms_div_approx.defjvp
+def _qrms_div_jvp(eps, scheme, backend, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    exact = lambda x: x / jnp.sqrt(  # noqa: E731
+        jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    _, tangent = jax.jvp(exact, (x,), (dx,))
+    return _qrms_div_approx(x, eps, scheme, backend), tangent
+
+
 def approx_softmax(
-    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None
+    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """Softmax whose normalisation uses the RAPID divider.
 
     The exp() stays exact (the paper approximates only mul/div); the
     denominator division — the op that dominates softmax cost on the
-    FPGA datapath — is replaced by the logarithmic divider.
+    FPGA datapath — is replaced by the logarithmic divider, fused with
+    its row-sum via the registry's ``softmax_div`` family.
     """
     x_max = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
     e = jnp.exp(x - x_max)
-    denom = jnp.sum(e, axis=axis, keepdims=True)
     if div_scheme in (None, "exact"):
-        return e / denom
-    return qdiv(e, denom, div_scheme).astype(x.dtype)
+        return e / jnp.sum(e, axis=axis, keepdims=True)
+    return qsoftmax_div(e, div_scheme, backend, axis=axis).astype(x.dtype)
 
 
 def approx_rms_normalize(
-    x: jnp.ndarray, eps: float = 1e-6, div_scheme: Optional[str] = None
+    x: jnp.ndarray, eps: float = 1e-6, div_scheme: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """x / sqrt(mean(x^2) + eps) with an optional RAPID divider."""
-    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    denom = jnp.sqrt(var + eps)
-    if div_scheme in (None, "exact"):
-        return (x.astype(jnp.float32) / denom).astype(x.dtype)
-    return qdiv(x.astype(jnp.float32), denom, div_scheme).astype(x.dtype)
+    return qrms_div(x, eps, div_scheme, backend)
 
 
 def approx_mean(
-    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None
+    x: jnp.ndarray, axis: int = -1, div_scheme: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
-    """Mean whose final divide uses the RAPID divider (used by the apps)."""
+    """Mean whose final divide uses the RAPID divider (used by the apps).
+
+    Both paths return ``x.dtype`` so exact/approx parity checks compare
+    like dtypes (the exact path used to leak float32).
+    """
     s = jnp.sum(x, axis=axis)
     n = jnp.float32(x.shape[axis])
     if div_scheme in (None, "exact"):
-        return s / n
-    return qdiv(s.astype(jnp.float32), n, div_scheme).astype(x.dtype)
+        return (s / n).astype(x.dtype)
+    return qdiv(s.astype(jnp.float32), n, div_scheme, backend).astype(x.dtype)

@@ -1,0 +1,15 @@
+"""Fused RAPID divider kernels (softmax combine, rms normalize, elementwise).
+
+The paper's headline wins come from "division-included applications";
+SIMDive (the same group's predecessor) shows the multiplier/divider pair
+only pays off when the divide is *fused* into the surrounding datapath.
+This package is that fusion for TPU: one VMEM-resident pass computes the
+denominator reduction (softmax row-sum / rms mean-of-squares) and the
+RAPID logarithmic divide, so neither the denominator nor the un-divided
+numerator ever round-trips HBM.
+
+Layout follows the sibling kernels: ``ref.py`` holds the canonical jnp
+semantics (shared verbatim with the kernel bodies for bit-parity),
+``fused_div.py`` the Pallas kernels, ``ops.py`` the padding/dispatch
+wrappers the backend registry calls.
+"""

@@ -1,0 +1,137 @@
+"""Pallas TPU kernels: fused RAPID divider passes.
+
+Three kernels, all pure VPU (int32 add/sub + 256-entry coefficient
+gather — the same per-element cost as the log_matmul products):
+
+  * ``softmax_div_pallas`` — one grid step holds a [bm, n_pad] slab of
+    exp-weights in VMEM, reduces the row-sum, floors it, and applies the
+    logarithmic divide to the resident slab.  The denominator and the
+    un-divided numerator never exist in HBM.
+  * ``rms_div_pallas``     — same shape, denominator is
+    sqrt(mean(x^2) + eps) over the real (unpadded) row width.
+  * ``div_pallas``         — elementwise a/b on pre-broadcast operands
+    (the online-softmax combine, whose denominator comes from a scan).
+
+The kernel bodies call the *same* jnp expressions as the jnp backend
+(`ref.softmax_denom` / `ref.rms_denom` / `float_approx.log_div_f32`), so
+jnp vs pallas-interpret parity is bit-for-bit by construction; the
+grid rows are independent ("parallel" semantics, no K accumulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import float_approx as fa
+from repro.kernels.fused_div import ref
+
+__all__ = ["softmax_div_pallas", "rms_div_pallas", "div_pallas",
+           "div_rowbcast_pallas"]
+
+
+def _softmax_kernel(e_ref, lut_ref, o_ref, *, floor: float):
+    e = e_ref[...]
+    denom = ref.softmax_denom(e, floor)
+    o_ref[...] = fa.log_div_f32(e, denom, lut_ref[...])
+
+
+def _rms_kernel(x_ref, lut_ref, o_ref, *, n: int, eps: float):
+    x = x_ref[...]
+    denom = ref.rms_denom(x, n, eps)
+    o_ref[...] = fa.log_div_f32(x, denom, lut_ref[...])
+
+
+def _div_kernel(a_ref, b_ref, lut_ref, o_ref):
+    o_ref[...] = fa.log_div_f32(a_ref[...], b_ref[...], lut_ref[...])
+
+
+def _div_rowbcast_kernel(a_ref, b_ref, lut_ref, o_ref):
+    # b is one denominator per row, broadcast over the lanes in VMEM —
+    # the [M, N] / [M, 1] shape of the online-softmax combine without
+    # ever materialising the broadcast in HBM
+    o_ref[...] = fa.log_div_f32(a_ref[...], b_ref[...][:, None], lut_ref[...])
+
+
+def _rowwise_call(kernel, x, lut, bm: int, interpret: bool):
+    """Shared pallas_call plumbing for the row-fused kernels.
+
+    x: [M, n_pad] f32 with M % bm == 0 and n_pad % LANE == 0; every grid
+    step owns bm full rows (the whole reduction axis stays in VMEM).
+    """
+    m, npad = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, npad), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel",))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x, lut)
+
+
+@functools.partial(jax.jit, static_argnames=("floor", "bm", "interpret"))
+def softmax_div_pallas(e, lut, *, floor: float = ref.SOFTMAX_FLOOR,
+                       bm: int = 8, interpret: bool = False):
+    """e[M, n_pad] -> e / max(rowsum(e), floor) with RAPID divides."""
+    return _rowwise_call(functools.partial(_softmax_kernel, floor=floor),
+                         e, lut, bm, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "eps", "bm", "interpret"))
+def rms_div_pallas(x, lut, *, n: int, eps: float, bm: int = 8,
+                   interpret: bool = False):
+    """x[M, n_pad] -> x / sqrt(mean(x[:, :n]^2) + eps), RAPID divides."""
+    return _rowwise_call(functools.partial(_rms_kernel, n=n, eps=eps),
+                         x, lut, bm, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def div_rowbcast_pallas(a, b, lut, *, bm: int = 8, interpret: bool = False):
+    """a[M, n_pad] / b[M] with the per-row denominator broadcast in VMEM."""
+    m, npad = a.shape
+    return pl.pallas_call(
+        _div_rowbcast_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, npad), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel",))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(a, b, lut)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def div_pallas(a, b, lut, *, block=(8, 128), interpret: bool = False):
+    """Elementwise RAPID a/b on f32 [rows, cols] tiles (pre-broadcast)."""
+    r, c = a.shape
+    br, bc = block
+    return pl.pallas_call(
+        _div_kernel,
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((256,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(a, b, lut)

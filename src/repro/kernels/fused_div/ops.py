@@ -1,0 +1,110 @@
+"""jit'd public wrappers for the fused divider kernels (pad + dispatch).
+
+The wrappers own shape plumbing only: collapse leading dims to rows, pad
+rows to the block grid and lanes to a multiple of 128, dispatch, slice.
+Padding values are chosen so the pad lanes stay numerically inert (zeros
+in the reduced numerator, ones in elementwise denominators) and the pad
+rows cannot trap (0/floor = 0, sqrt(eps) > 0); everything padded is
+sliced off before return.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+from repro.kernels.fused_div import ref
+from repro.kernels.fused_div.fused_div import (
+    div_pallas,
+    div_rowbcast_pallas,
+    rms_div_pallas,
+    softmax_div_pallas,
+)
+
+__all__ = ["fused_softmax_div", "fused_rms_div", "fused_elementwise_div"]
+
+
+def _pick_bm(m: int, npad: int) -> int:
+    """Rows per grid step: >= the f32 sublane tile (8), capped so the
+    in/out slabs stay well under VMEM (~1 MiB of f32 per operand)."""
+    cap = max(8, ((1 << 18) // npad) // 8 * 8)
+    rows = -(-m // 8) * 8
+    return max(8, min(256, cap, rows))
+
+
+def _default_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _as_rows(x: jnp.ndarray):
+    """[..., n] -> padded [M_pad, n_pad] f32 + the unpad geometry."""
+    lead, n = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, n).astype(jnp.float32)
+    m = x2.shape[0]
+    npad = ref.padded_width(n)
+    bm = _pick_bm(m, npad)
+    mp = -(-m // bm) * bm
+    xp = jnp.pad(x2, ((0, mp - m), (0, npad - n)))
+    return xp, bm, m, n, lead
+
+
+def fused_softmax_div(e: jnp.ndarray, scheme: str, *,
+                      floor: float = ref.SOFTMAX_FLOOR,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Softmax combine: e / max(sum(e, -1), floor), fused in one pass."""
+    interpret = _default_interpret(interpret)
+    lut = fa.div_lut_device(scheme)
+    ep, bm, m, n, lead = _as_rows(e)
+    out = softmax_div_pallas(ep, lut, floor=float(floor), bm=bm,
+                             interpret=interpret)
+    return out[:m, :n].reshape(*lead, n).astype(e.dtype)
+
+
+def fused_rms_div(x: jnp.ndarray, eps: float, scheme: str, *,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """RMS normalize: x / sqrt(mean(x^2, -1) + eps), fused in one pass."""
+    interpret = _default_interpret(interpret)
+    lut = fa.div_lut_device(scheme)
+    xp, bm, m, n, lead = _as_rows(x)
+    out = rms_div_pallas(xp, lut, n=n, eps=float(eps), bm=bm,
+                         interpret=interpret)
+    return out[:m, :n].reshape(*lead, n).astype(x.dtype)
+
+
+def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str, *,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Elementwise RAPID a/b (broadcasting ok); output dtype follows a.
+
+    The one-denominator-per-row shape (``b`` scalar or trailing dim 1,
+    as the online-softmax combine divides ``acc`` by ``l[..., None]``)
+    dispatches to a row-broadcast kernel: ``b`` stays a vector and the
+    lane broadcast happens in VMEM instead of materialising an a-sized
+    denominator tensor in HBM.
+    """
+    interpret = _default_interpret(interpret)
+    lut = fa.div_lut_device(scheme)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    orig = a.dtype
+    out_shape = jnp.broadcast_shapes(a.shape, b.shape)
+    rowbcast = (out_shape == a.shape and a.ndim >= 1
+                and (b.ndim == 0 or b.shape[-1] == 1))
+    if rowbcast:
+        ap, bm, m, n, lead = _as_rows(a)
+        bv = jnp.broadcast_to(b, (*a.shape[:-1], 1)).reshape(-1)
+        bv = jnp.pad(bv.astype(jnp.float32), (0, ap.shape[0] - m),
+                     constant_values=1.0)
+        out = div_rowbcast_pallas(ap, bv, lut, bm=bm, interpret=interpret)
+        return out[:m, :n].reshape(*lead, n).astype(orig)
+    a, b = jnp.broadcast_arrays(a, b)
+    shape = a.shape
+    br, bc = 8, ref.LANE
+    af = a.reshape(-1).astype(jnp.float32)
+    bf = b.reshape(-1).astype(jnp.float32)
+    pad = (-af.size) % (br * bc)
+    af = jnp.pad(af, (0, pad)).reshape(-1, bc)
+    bf = jnp.pad(bf, (0, pad), constant_values=1.0).reshape(-1, bc)
+    out = div_pallas(af, bf, lut, block=(br, bc), interpret=interpret)
+    return out.reshape(-1)[: a.size].reshape(shape).astype(orig)

@@ -1,0 +1,96 @@
+"""Canonical semantics for the fused divider ops (the jnp oracle).
+
+Every function here is used *verbatim* by both the jnp backend and the
+Pallas kernel bodies, so the two execution paths agree bit-for-bit by
+construction — the same guarantee the log_matmul kernel gets from
+sharing ``float_approx.log_mul_f32``.
+
+The one subtlety is the denominator reduction.  XLA's reduce picks its
+partial-sum grouping from the *shape* of the reduced operand, so summing
+a row of ``n`` elements and summing the same row zero-padded to ``n'``
+can differ in the last ulp.  The kernel necessarily reduces the 128-lane
+-padded row it holds in VMEM; the canonical semantics therefore *define*
+the denominator as the reduction over the lane-padded row (appended
+zeros are mathematically inert — every input row is padded with exact
+zeros), and the jnp oracle pads the same way.  Empirically the grouping
+depends only on the padded width, not on the number of rows in the
+operand, which is what lets a [bm, n_pad] kernel tile match a [M, n_pad]
+oracle reduction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+
+__all__ = [
+    "LANE",
+    "SOFTMAX_FLOOR",
+    "padded_width",
+    "pad_lanes",
+    "softmax_denom",
+    "rms_denom",
+    "softmax_div_ref",
+    "rms_div_ref",
+]
+
+# TPU vector lane count: the last dim of every kernel block is padded to
+# a multiple of this, and the canonical denominator reduction runs over
+# the padded row.
+LANE = 128
+
+# Denominator floor for the softmax combine: keeps fully-masked rows
+# (sum of exp-weights == 0) from dividing by zero.  Matches the floor
+# the attention layers applied before the op was fused.
+SOFTMAX_FLOOR = 1e-20
+
+
+def padded_width(n: int) -> int:
+    """Last-dim width after padding to a multiple of LANE."""
+    return -(-n // LANE) * LANE
+
+
+def pad_lanes(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad the last dim to a multiple of LANE (identity if aligned)."""
+    n = x.shape[-1]
+    pad = padded_width(n) - n
+    if not pad:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def softmax_denom(e_padded: jnp.ndarray, floor: float) -> jnp.ndarray:
+    """Row-sum of exp-weights with a floor; ``e_padded`` is lane-padded."""
+    return jnp.maximum(jnp.sum(e_padded, axis=-1, keepdims=True),
+                       jnp.float32(floor))
+
+
+def rms_denom(x_padded: jnp.ndarray, n: int, eps: float) -> jnp.ndarray:
+    """sqrt(mean(x^2) + eps) where the mean is over the *real* width n.
+
+    Canonicalised as ``sqrt((ss + n*eps) * (1/n))`` — algebraically the
+    same, but every op is immune to the compilation-context rewrites
+    that break bit-parity between eager jnp and a jitted pallas body:
+    a divide-by-constant gets strength-reduced inconsistently, and a
+    ``ss*(1/n) + eps`` chain FMA-contracts inside the pallas_call (the
+    same instability the fused-epilogue notes document for gelu's tanh
+    form).  ``(add-const) * mul-const`` followed by sqrt has no
+    contractible pattern; the constants are folded once in python so
+    both contexts see identical f32 literals.
+    """
+    ss = jnp.sum(x_padded * x_padded, axis=-1, keepdims=True)
+    arg = (ss + jnp.float32(n * eps)) * jnp.float32(1.0 / n)
+    return jnp.sqrt(arg)
+
+
+def softmax_div_ref(e: jnp.ndarray, lut: jnp.ndarray,
+                    floor: float = SOFTMAX_FLOOR) -> jnp.ndarray:
+    """exp-weights / row-sum through the RAPID divider.  f32 in/out."""
+    denom = softmax_denom(pad_lanes(e), floor)
+    return fa.log_div_f32(e, denom, lut)
+
+
+def rms_div_ref(x: jnp.ndarray, lut: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """x / sqrt(mean(x^2, last axis) + eps) via the RAPID divider. f32."""
+    denom = rms_denom(pad_lanes(x), x.shape[-1], eps)
+    return fa.log_div_f32(x, denom, lut)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import schemes
+from repro.core import mitchell, schemes
 from repro.kernels.rapid_mul.rapid_mul import rapid_mul_pallas
 
 __all__ = ["rapid_mul"]
@@ -20,8 +20,8 @@ def rapid_mul(
     """Elementwise RAPID approximate product of unsigned ints < 2**n_bits."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    sch = schemes.MUL_SCHEMES[scheme]
-    lut = jnp.asarray(sch.lut(n_bits - 1), dtype=jnp.int32)
+    # memoized per (scheme, n_bits): one host build + one upload ever
+    lut = mitchell.lut_device(schemes.MUL_SCHEMES[scheme], n_bits - 1)
     shape = a.shape
     af = a.reshape(-1).astype(jnp.uint32)
     bf = b.reshape(-1).astype(jnp.uint32)

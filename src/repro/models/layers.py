@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ApproxConfig, ModelConfig
-from repro.core.ops import qdiv, qmatmul
+from repro.core.backend import SOFTMAX_FLOOR
+from repro.core.ops import qdiv, qmatmul, qrms_div, qsoftmax_div
 from repro.models.params import P
 
 __all__ = [
@@ -45,6 +46,8 @@ DEFAULT_RULES = {
     "expert": "model",
     "fsdp": "data",
     "seq": None,
+    "seq_act": None,
+    "act_embed": None,
 }
 
 
@@ -56,7 +59,25 @@ class ParallelCtx:
     rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
 
     def axes(self, *logical):
-        return PartitionSpec(*(self.rules.get(a) if a else None for a in logical))
+        """Logical names -> PartitionSpec; unknown names raise.
+
+        Silently mapping an unknown logical axis to None used to make
+        sharding-constraint typos vanish (the constraint became a no-op
+        replication); every name must now exist in the rule table
+        (``None``/"" entries are still the explicit way to replicate).
+        """
+        phys = []
+        for a in logical:
+            if not a:
+                phys.append(None)
+                continue
+            if a not in self.rules:
+                raise KeyError(
+                    f"unknown logical axis {a!r}; rule table has "
+                    f"{sorted(self.rules)} — add it to the ctx rules / "
+                    "layers.DEFAULT_RULES / parallel.sharding.make_rules")
+            phys.append(self.rules[a])
+        return PartitionSpec(*phys)
 
     def shard(self, x, *logical):
         if self.mesh is None:
@@ -83,10 +104,10 @@ def dense(x, w, acfg: ApproxConfig, site: str, bias=None, activation=None):
 
     ``bias``/``activation`` ride the fused matmul epilogue (exact and
     approximate backends alike); the backend itself comes from the
-    registry via ``acfg.matmul_backend`` ("auto" defers to env/default/
+    registry via ``acfg.backend`` ("auto" defers to env/default/
     hardware — see repro.core.backend).
     """
-    return qmatmul(x, w, acfg.mul(site), backend=acfg.matmul_backend,
+    return qmatmul(x, w, acfg.mul(site), backend=acfg.backend,
                    bias=bias, activation=activation)
 
 
@@ -98,27 +119,19 @@ def norm_params(cfg: ModelConfig, kind: str = "rms") -> dict:
 
 
 def rms_norm(x, params, eps: float, acfg: ApproxConfig):
+    # qrms_div owns both paths: exact, or mean-of-squares + sqrt + RAPID
+    # divide fused in one registry op (one kernel launch on the pallas
+    # backend, engine-pinnable)
     xf = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-    denom = jnp.sqrt(var + eps)
-    sch = acfg.div("norm")
-    if sch:
-        y = qdiv(xf, denom, sch)
-    else:
-        y = xf / denom
+    y = qrms_div(xf, eps, acfg.div("norm"), backend=acfg.backend)
     return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
 
 
 def layer_norm(x, params, eps: float, acfg: ApproxConfig):
+    # layer norm == rms normalize of the centred activations
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
-    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
-    denom = jnp.sqrt(var + eps)
-    sch = acfg.div("norm")
-    if sch:
-        y = qdiv(xf - mu, denom, sch)
-    else:
-        y = (xf - mu) / denom
+    y = qrms_div(xf - mu, eps, acfg.div("norm"), backend=acfg.backend)
     y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
     return y.astype(x.dtype)
 
@@ -159,10 +172,14 @@ def attention_params(cfg: ModelConfig, cross: bool = False) -> dict:
 
 
 def _online_softmax_combine(acc, l, m, acfg: ApproxConfig):
+    # the denominator comes from the online scan, so this is the
+    # registry's *elementwise* div family (broadcast over the head dim);
+    # same floor as the fused softmax_div path so the two softmax
+    # formulations keep agreeing on fully-masked rows
     sch = acfg.div("softmax")
-    l = jnp.maximum(l, 1e-20)
+    l = jnp.maximum(l, SOFTMAX_FLOOR)
     if sch:
-        return qdiv(acc, l[..., None], sch)
+        return qdiv(acc, l[..., None], sch, backend=acfg.backend)
     return acc / l[..., None]
 
 
@@ -233,7 +250,9 @@ def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
     if sch:
         m = jax.lax.stop_gradient(s.max(axis=-1, keepdims=True))
         e = jnp.exp(s - m)
-        p = qdiv(e, jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-20), sch)
+        # fused softmax combine: row-sum + floor + RAPID divide in one
+        # registry op (single VMEM pass on the pallas backend)
+        p = qsoftmax_div(e, sch, backend=acfg.backend)
     else:
         p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))

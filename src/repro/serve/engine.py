@@ -36,8 +36,8 @@ class ServeEngine:
 
     def __post_init__(self):
         resolved = be.resolve_backend_name(
-            self.backend or self.model.cfg.approx.matmul_backend)
-        if resolved != self.model.cfg.approx.matmul_backend:
+            self.backend or self.model.cfg.approx.backend)
+        if resolved != self.model.cfg.approx.backend:
             self.model = Model(self.model.cfg.with_backend(resolved))
         self.backend = resolved
         self._decode = jax.jit(
@@ -63,10 +63,13 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks)}
         logits, cache = self._prefill(self.params, batch)
 
+        # split before the *first* sample too: sampling with the root key
+        # and then splitting that same key inside the loop reuses it
         rng = jax.random.PRNGKey(self.seed)
         out = [[] for _ in range(B)]
         done = np.zeros(B, bool)
-        tok = self._sample(logits, rng)
+        rng, sub = jax.random.split(rng)
+        tok = self._sample(logits, sub)
         for step in range(max_new):
             t = np.asarray(tok)
             for i in range(B):

@@ -36,8 +36,8 @@ def _pin_backend(model: Model, backend: Optional[str]) -> Model:
     choice between microbatches or across recompiles.
     """
     resolved = be.resolve_backend_name(
-        backend or model.cfg.approx.matmul_backend)
-    if resolved == model.cfg.approx.matmul_backend:
+        backend or model.cfg.approx.backend)
+    if resolved == model.cfg.approx.backend:
         return model
     return Model(model.cfg.with_backend(resolved))
 

@@ -1,6 +1,7 @@
 """Backend registry: selection precedence, batched qmatmul fwd+grad vs the
-exact oracle, fused-epilogue parity between jnp and pallas-interpret, and
-the memoized LUT caches."""
+exact oracle, fused-epilogue + divider-family parity between jnp and
+pallas-interpret, the memoized LUT caches, and the pinned-backend
+threading regression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +9,14 @@ import pytest
 
 from repro.core import backend as be
 from repro.core import float_approx as fa
-from repro.core.ops import qdiv, qmatmul, qmatmul_batched
+from repro.core import mitchell, schemes
+from repro.core.ops import (
+    qdiv,
+    qmatmul,
+    qmatmul_batched,
+    qrms_div,
+    qsoftmax_div,
+)
 
 
 # --------------------------------------------------------------------------
@@ -78,7 +86,7 @@ def test_host_lut_memoized_and_readonly():
 def test_device_lut_usable_after_first_call_under_jit():
     """Regression: the memoized device LUT must stay concrete even when
     the cache is first populated inside a jit trace (no tracer leak)."""
-    fa._lut_device.cache_clear()
+    mitchell.lut_device.cache_clear()
     a = jnp.float32(3.0)
     b = jnp.float32(5.0)
     jitted = jax.jit(lambda a, b: fa.approx_mul(a, b, "rapid5"))(a, b)
@@ -216,6 +224,173 @@ def test_fused_epilogue_jnp_vs_pallas_interpret_bitexact(activation, rng):
                     bias=b, activation=activation)
     np.testing.assert_array_equal(
         np.asarray(o_jnp).view(np.int32), np.asarray(o_pal).view(np.int32))
+
+
+def test_int_kernel_lut_memoized_per_scheme_and_width():
+    """Regression: rapid_mul/rapid_div used to rebuild + re-upload the
+    host LUT on every call; now one device array per (scheme, width)."""
+    mul10 = schemes.MUL_SCHEMES["rapid10"]
+    d1 = mitchell.lut_device(mul10, 15)
+    assert mitchell.lut_device(mul10, 15) is d1
+    assert mitchell.lut_device(mul10, 31) is not d1
+    div9 = schemes.DIV_SCHEMES["rapid9"]
+    assert mitchell.lut_device(div9, 15) is mitchell.lut_device(div9, 15)
+    np.testing.assert_array_equal(np.asarray(d1), mul10.lut(15))
+    assert not mitchell.lut_host(mul10, 15).flags.writeable
+
+
+# --------------------------------------------------------------------------
+# divider family: jnp vs pallas-interpret bit-exactness sweep
+# --------------------------------------------------------------------------
+
+DIV_SWEEP_SCHEMES = ("mitchell", "rapid3", "rapid5", "rapid9")
+DIV_SWEEP_SHAPES = [
+    (5,),          # single unaligned row
+    (3, 7),        # tiny rows, heavy lane padding
+    (2, 3, 40),    # leading batch dims, unaligned width
+    (4, 128),      # lane-aligned width
+    (2, 5, 200),   # batch dims + cross-lane-boundary width
+    (16, 1000),    # wide unaligned rows
+    (300, 4096),   # _pick_bm caps bm=64 -> 5 grid steps + row padding:
+                   # the kernel tile [bm, n_pad] genuinely differs from
+                   # the oracle's [M, n_pad] reduction operand here
+]
+
+
+@pytest.mark.parametrize("scheme", DIV_SWEEP_SCHEMES)
+@pytest.mark.parametrize("shape", DIV_SWEEP_SHAPES)
+def test_div_family_jnp_vs_pallas_interpret_bitexact(scheme, shape, rng):
+    """The whole divider registry family must agree bit-for-bit between
+    the jnp oracle and the fused Pallas kernels under the interpreter
+    (shared canonical semantics: repro.kernels.fused_div.ref)."""
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    e = jnp.abs(x)  # softmax combine takes non-negative exp-weights
+    b = jnp.asarray(np.abs(rng.normal(size=shape)) + 0.1, jnp.float32)
+
+    pairs = [
+        (qdiv(x, b, scheme, backend="jnp"),
+         qdiv(x, b, scheme, backend="pallas-interpret")),
+        (qsoftmax_div(e, scheme, backend="jnp"),
+         qsoftmax_div(e, scheme, backend="pallas-interpret")),
+        (qrms_div(x, 1e-6, scheme, backend="jnp"),
+         qrms_div(x, 1e-6, scheme, backend="pallas-interpret")),
+    ]
+    for got_jnp, got_pal in pairs:
+        np.testing.assert_array_equal(
+            np.asarray(got_jnp).view(np.int32),
+            np.asarray(got_pal).view(np.int32))
+
+
+def test_div_broadcast_denominator_bitexact(rng):
+    """The online-softmax combine shape: [., ., 1] denominator broadcast
+    over the head dim, elementwise div family on both backends."""
+    acc = jnp.asarray(rng.normal(size=(2, 4, 32)), jnp.float32)
+    l = jnp.asarray(np.abs(rng.normal(size=(2, 4, 1))) + 0.1, jnp.float32)
+    a = qdiv(acc, l, "rapid9", backend="jnp")
+    b = qdiv(acc, l, "rapid9", backend="pallas-interpret")
+    assert a.shape == acc.shape
+    np.testing.assert_array_equal(
+        np.asarray(a).view(np.int32), np.asarray(b).view(np.int32))
+
+
+def test_softmax_div_matches_composed_reference(rng):
+    """qsoftmax_div == approx_div(e, lane-padded row-sum) — the fusion
+    changes launches, not semantics."""
+    e = jnp.asarray(np.abs(rng.normal(size=(3, 48))), jnp.float32)
+    ep = jnp.pad(e, ((0, 0), (0, 128 - 48)))
+    denom = jnp.maximum(jnp.sum(ep, axis=-1, keepdims=True), 1e-20)
+    want = fa.approx_div(e, denom, "rapid9")
+    got = qsoftmax_div(e, "rapid9", backend="jnp")
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
+
+
+def test_fused_div_ops_straight_through_grads(rng):
+    """The fused divider ops carry straight-through exact gradients: the
+    backward pass equals the exact composition's gradients."""
+    e = jnp.asarray(np.abs(rng.normal(size=(4, 24))) + 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
+
+    g_sm = jax.grad(lambda e: qsoftmax_div(e, "rapid9", "jnp").sum())(e)
+    g_sm_exact = jax.grad(
+        lambda e: (e / jnp.maximum(e.sum(-1, keepdims=True), 1e-20)).sum())(e)
+    np.testing.assert_allclose(np.asarray(g_sm), np.asarray(g_sm_exact),
+                               rtol=2e-5, atol=2e-5)
+
+    g_rms = jax.grad(lambda x: qrms_div(x, 1e-6, "rapid9", "jnp").sum())(x)
+    g_rms_exact = jax.grad(
+        lambda x: (x / jnp.sqrt(jnp.mean(jnp.square(x), -1, keepdims=True)
+                                + 1e-6)).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_rms), np.asarray(g_rms_exact),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# pinned backend reaches every divide site
+# --------------------------------------------------------------------------
+
+def _jaxpr_has_pallas(jaxpr) -> bool:
+    return "pallas_call" in str(jaxpr)
+
+
+def test_pinned_backend_reaches_every_divide_site(monkeypatch):
+    """Regression: layers used to drop the backend argument at all four
+    qdiv call sites, so the engine/trainstep-pinned backend never reached
+    the divider and divides silently re-resolved from env/default.  With
+    'jnp' pinned and the env pointing at pallas, no pallas divide may be
+    traced; with pallas-interpret pinned and the env unset, every divide
+    site must trace the fused kernel."""
+    from repro.configs.base import ApproxConfig
+    from repro.models import layers
+
+    norm_p = {"scale": jnp.ones((64,), jnp.float32),
+              "bias": jnp.zeros((64,), jnp.float32)}
+    x = jnp.ones((2, 64), jnp.float32)
+    q = jnp.ones((1, 4, 2, 8), jnp.float32)
+    kv = jnp.ones((1, 4, 2, 8), jnp.float32)
+    pos = jnp.arange(4)
+    acc = jnp.ones((1, 4, 2, 8), jnp.float32)
+    l = jnp.ones((1, 4, 2), jnp.float32)
+    m = jnp.zeros((1, 4, 2), jnp.float32)
+
+    def traces(acfg):
+        return [
+            jax.make_jaxpr(
+                lambda x: layers.rms_norm(x, norm_p, 1e-6, acfg))(x),
+            jax.make_jaxpr(
+                lambda x: layers.layer_norm(x, norm_p, 1e-6, acfg))(x),
+            jax.make_jaxpr(
+                lambda q, kv: layers._attn_qchunk_core(
+                    q, kv, kv, pos, pos, 0, True, acfg))(q, kv),
+            jax.make_jaxpr(
+                lambda acc, l, m: layers._online_softmax_combine(
+                    acc, l, m, acfg))(acc, l, m),
+        ]
+
+    # pinned jnp + env pointing elsewhere -> the pin must win everywhere
+    monkeypatch.setenv(be.ENV_VAR, "pallas-interpret")
+    pinned_jnp = ApproxConfig(div_scheme="rapid9", backend="jnp")
+    for jaxpr in traces(pinned_jnp):
+        assert not _jaxpr_has_pallas(jaxpr), jaxpr
+
+    # pinned pallas-interpret + env unset -> every site traces the kernel
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    pinned_pal = ApproxConfig(div_scheme="rapid9", backend="pallas-interpret")
+    for jaxpr in traces(pinned_pal):
+        assert _jaxpr_has_pallas(jaxpr), jaxpr
+
+
+def test_parallel_ctx_axes_rejects_unknown_logical_names():
+    """Sharding-constraint typos must raise instead of silently mapping
+    to None (replication); DEFAULT_RULES covers the names layers use."""
+    from repro.models.layers import DEFAULT_RULES, ParallelCtx
+
+    ctx = ParallelCtx()
+    assert ctx.axes("batch", "seq_act", "act_embed") is not None
+    with pytest.raises(KeyError, match="seq_atc"):
+        ctx.axes("batch", "seq_atc")
+    for name in ("seq_act", "act_embed"):
+        assert name in DEFAULT_RULES
 
 
 def test_fused_epilogue_kernel_interpret_vs_reference(rng):

@@ -106,3 +106,24 @@ def test_engine_generates_deterministically():
     out2 = eng.generate([[1, 2, 3], [4, 5, 6, 7]], max_new=6)
     assert out1 == out2
     assert all(len(o) == 6 for o in out1)
+
+
+def test_engine_never_samples_with_root_or_reused_key(monkeypatch):
+    """Regression: generate() sampled the first token with the root
+    PRNGKey and then split that same key in the decode loop — classic
+    key reuse.  Every categorical draw must use a fresh split key."""
+    cfg, m, params = _setup("minicpm_2b")
+    eng = ServeEngine(m, params, CTX, cache_n=64, temperature=1.0)
+    seen = []
+    orig = jax.random.categorical
+
+    def spy(key, *args, **kwargs):
+        seen.append(np.asarray(key).tobytes())
+        return orig(key, *args, **kwargs)
+
+    monkeypatch.setattr(jax.random, "categorical", spy)
+    eng.generate([[1, 2, 3]], max_new=4)
+    assert len(seen) >= 2
+    root = np.asarray(jax.random.PRNGKey(eng.seed)).tobytes()
+    assert root not in seen          # the root key is only ever split
+    assert len(set(seen)) == len(seen)  # and no key is used twice
