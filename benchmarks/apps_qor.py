@@ -10,16 +10,22 @@ PAPER = {
 }
 
 
-def main():
+def main(smoke: bool = False):
     print("app,variant,metric,value,paper_value")
-    jr = jpeg.run(n_images=2, size=192)
+    # smoke: one tiny image / a few beats per app — executes every
+    # variant's pipeline, makes no QoR claim
+    variants = ("accurate", "rapid") if smoke else (
+        "accurate", "rapid", "rapid5", "mitchell", "truncated")
+    jr = jpeg.run(variants, n_images=1 if smoke else 2,
+                  size=64 if smoke else 192)
     for k, v in jr.items():
         print(f"jpeg,{k},psnr_db,{v:.2f},{PAPER['jpeg_psnr'].get(k, '')}")
-    pr = pan_tompkins.run(n_beats=30)
+    pr = pan_tompkins.run(variants, n_beats=8 if smoke else 30)
     for k, v in pr.items():
         print(f"pan_tompkins,{k},sensitivity,{v['sensitivity']:.3f},~1.0")
         print(f"pan_tompkins,{k},psnr_db,{v['psnr_vs_accurate_db']},>=28")
-    hr = harris.run(n_images=2, size=160)
+    hr = harris.run(variants, n_images=1 if smoke else 2,
+                    size=96 if smoke else 160)
     for k, v in hr.items():
         print(f"harris,{k},correct_vectors_pct,{v},"
               f"{PAPER['harris_vectors'].get(k, '')}")

@@ -38,8 +38,10 @@ def run(steps: int = 40, seed: int = 0):
     return out
 
 
-def main():
-    res = run()
+def main(smoke: bool = False):
+    # smoke: a handful of steps — proves the exact AND rapid train
+    # steps still build and run, not that they converge
+    res = run(steps=4) if smoke else run()
     print("step,loss_exact,loss_rapid")
     for i, (a, b) in enumerate(zip(res["exact"], res["rapid"])):
         if i % 5 == 0 or i == len(res["exact"]) - 1:

@@ -44,12 +44,12 @@ def _bench(fn, *args, iters: int = 10) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(seed: int = 0):
+def run(seed: int = 0, shrink: int = 1, iters: int = 10):
     rng = np.random.default_rng(seed)
     bk = be.resolve_backend_name(None)
     # the interpreter is a correctness path, not a speed path: per-op
     # python dispatch makes full-size rows take minutes — shrink 16x
-    shrink = 16 if bk == "pallas-interpret" else 1
+    shrink = max(shrink, 16 if bk == "pallas-interpret" else 1)
     rows = []
     for label, m, n in SHAPES:
         m = max(8, m // shrink)
@@ -65,15 +65,18 @@ def run(seed: int = 0):
                 x, jnp.sqrt(jnp.mean(jnp.square(x), -1, keepdims=True)
                             + 1e-6), "rapid9", backend=bk))
             fused = jax.jit(lambda x: qrms_div(x, 1e-6, "rapid9", bk))
-        t_un = _bench(unfused, x)
-        t_fu = _bench(fused, x)
+        t_un = _bench(unfused, x, iters=iters)
+        t_fu = _bench(fused, x, iters=iters)
         rows.append((f"{label}[{bk}]", t_un, t_fu))
     return rows
 
 
-def main():
+def main(smoke: bool = False):
     print("name,unfused_us,fused_us,speedup")
-    for name, t_un, t_fu in run():
+    # smoke: 32x-shrunk rows, one rep — executes the whole fused-divider
+    # path (wrapper padding included) without measuring anything
+    rows = run(shrink=32, iters=1) if smoke else run()
+    for name, t_un, t_fu in rows:
         print(f"{name},{t_un:.1f},{t_fu:.1f},{t_un / t_fu:.2f}x")
 
 

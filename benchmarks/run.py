@@ -7,29 +7,45 @@
   e2e_train          trainability of RAPID arithmetic (loss curves)
   roofline_report    SSRoofline table from the dry-run artifacts
 
-``python -m benchmarks.run [name ...]`` — no args runs everything.
+``python -m benchmarks.run [name ...] [--smoke]`` — no names runs
+everything.  ``--smoke`` runs every module at tiny shapes / one rep so
+CI can prove the whole harness still executes (a bit-rot gate, not a
+measurement); any sub-benchmark that raises is reported with its
+traceback and the process exits non-zero.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
+import traceback
 
 ALL = ["table3_accuracy", "table3_throughput", "fused_div", "apps_qor",
        "e2e_train", "roofline_report"]
 
 
-def main(names=None) -> int:
-    names = names or ALL
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", default=[],
+                    help=f"benchmarks to run (default: all of {ALL})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one rep: CI bit-rot gate")
+    args = ap.parse_args(argv)
+    unknown = [n for n in args.names if n not in ALL]
+    if unknown:
+        ap.error(f"unknown benchmarks {unknown}; have {ALL}")
+    names = args.names or ALL
     failures = []
     for name in names:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            mod.main(smoke=args.smoke)
             print(f"===== {name} done in {time.time()-t0:.1f}s =====")
-        except Exception as e:  # keep the harness going
+        except Exception as e:  # keep the harness going, fail at exit
             failures.append(name)
+            traceback.print_exc()
             print(f"===== {name} FAILED: {type(e).__name__}: {e} =====")
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
@@ -38,4 +54,4 @@ def main(names=None) -> int:
 
 
 if __name__ == "__main__":
-    raise SystemExit(main(sys.argv[1:] or None))
+    raise SystemExit(main(sys.argv[1:]))

@@ -68,8 +68,9 @@ def run(samples: int = 1_000_000, seed: int = 0):
     return rows
 
 
-def main(csv: bool = True):
-    rows = run()
+def main(csv: bool = True, smoke: bool = False):
+    # smoke: enough samples for the stats to be finite, not meaningful
+    rows = run(samples=20_000) if smoke else run()
     print("op,bits,scheme,ARE%,PRE%,bias%,paper_ARE%,paper_PRE%")
     for r in rows:
         print(f"{r[0]},{r[1]},{r[2]},{r[3]:.3f},{r[4]:.2f},{r[5]:+.3f},"

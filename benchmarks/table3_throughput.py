@@ -29,7 +29,7 @@ def _bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(n: int = 1 << 20, seed: int = 0):
+def run(n: int = 1 << 20, seed: int = 0, mm_shape=(256, 512, 256)):
     rng = np.random.default_rng(seed)
     a = jnp.asarray(rng.uniform(0.5, 100, n), jnp.float32)
     b = jnp.asarray(rng.uniform(0.5, 100, n), jnp.float32)
@@ -53,22 +53,27 @@ def run(n: int = 1 << 20, seed: int = 0):
     from repro.core import backend as be
     from repro.core.ops import qmatmul
     bk = be.resolve_backend_name(None)
-    x = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
-    bias = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    M, K, N = mm_shape
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
     mm_exact = jax.jit(lambda x, w: qmatmul(x, w, None))
     mm_rapid = jax.jit(lambda x, w: qmatmul(x, w, "rapid10", backend=bk))
     mm_fused = jax.jit(lambda x, w: qmatmul(x, w, "rapid10", backend=bk,
                                             bias=bias, activation="silu"))
-    rows.append(("matmul_exact_256x512x256", _bench(mm_exact, x, w)))
-    rows.append((f"matmul_rapid_256x512x256[{bk}]", _bench(mm_rapid, x, w)))
+    tag = f"{M}x{K}x{N}"
+    rows.append((f"matmul_exact_{tag}", _bench(mm_exact, x, w)))
+    rows.append((f"matmul_rapid_{tag}[{bk}]", _bench(mm_rapid, x, w)))
     rows.append((f"matmul_rapid_fused_bias_silu[{bk}]", _bench(mm_fused, x, w)))
     return rows
 
 
-def main():
+def main(smoke: bool = False):
     print("name,us_per_call,derived")
-    for name, us in run():
+    # smoke: tiny elementwise arrays + a deliberately degenerate matmul
+    # (K=130 is the shape class _pick_blocks used to mis-tile)
+    rows = run(n=1 << 12, mm_shape=(24, 130, 12)) if smoke else run()
+    for name, us in rows:
         print(f"{name},{us:.1f},cpu-proxy")
     print("# structural per-element cost (TPU target): exact f32 mul = 1 MXU"
           " mul-add lane; RAPID mul = 1 int32 add + 1 x 256-entry VMEM gather"

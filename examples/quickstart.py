@@ -31,3 +31,33 @@ print(f"\nmatmul rel-L1 error (rapid10): {rel:.4%}  "
 # --- it differentiates: straight-through gradients ----------------------
 g = jax.grad(lambda x: qmatmul(x, w, "rapid10").sum())(x)
 print("grad shape:", g.shape, "finite:", bool(jnp.isfinite(g).all()))
+
+# --- backend selection & epilogues --------------------------------------
+# Every approximate op routes through the backend registry
+# (repro.core.backend): "jnp" (partitioner-visible oracle), "pallas"
+# (TPU kernels) or "pallas-interpret" (kernels on CPU, for parity
+# checks).  Selection precedence at any call site:
+#   backend= argument > $RAPID_BACKEND env var > process default
+#   (backend.set_default_backend) > hardware autodetect.
+# Model configs carry a *per-site* map instead of one global name, so a
+# single model can mix execution paths:
+#   cfg.with_site_backends({"mlp": "pallas", "logits": "jnp"})
+# (sites: mlp / attn_proj / logits / norm / softmax / default; the
+# launchers expose the same via --backend / --site-backend SITE=NAME).
+from repro.core.backend import Epilogue, resolve_backend_name
+
+print("\nresolved backend:", resolve_backend_name(None))
+
+# The epilogue menu fuses a whole block tail into the matmul's output
+# tile: norm(activation(x @ w + bias) + residual) in one VMEM-resident
+# pass, with the normalization divide running through the RAPID divider.
+bias = jnp.zeros((32,), jnp.float32)
+residual = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+tail, res_stream = qmatmul(
+    x, w, "rapid10",
+    bias=bias,
+    residual=residual,
+    epilogue=Epilogue(activation="silu", norm="rms", div_scheme="rapid9",
+                      keep_prenorm=True),  # also emit the pre-norm value
+)
+print("fused block tail:", tail.shape, "residual stream:", res_stream.shape)

@@ -33,6 +33,31 @@ SHAPES = {
 }
 
 
+# Sites that can carry their own backend-registry override: the matmul
+# sites (mlp / attn_proj / logits) and the divider sites (norm /
+# softmax).  "default" is the fallback entry every site defers to.
+BACKEND_SITES = ("mlp", "attn_proj", "logits", "norm", "softmax")
+
+
+def _canon_backends(backends) -> Tuple[Tuple[str, str], ...]:
+    """Canonicalize a site->backend spec to sorted hashable pairs.
+
+    Accepts a plain registry name (applied as the default for every
+    site), a mapping over ``BACKEND_SITES`` + "default", or the already-
+    canonical tuple-of-pairs form.  Unknown site keys raise.
+    """
+    if isinstance(backends, str):
+        return (("default", backends),)
+    pairs = dict(backends)
+    unknown = set(pairs) - set(BACKEND_SITES) - {"default"}
+    if unknown:
+        raise KeyError(
+            f"unknown backend sites {sorted(unknown)}; have "
+            f"{BACKEND_SITES + ('default',)}")
+    pairs.setdefault("default", "auto")
+    return tuple(sorted(pairs.items()))
+
+
 @dataclass(frozen=True)
 class ApproxConfig:
     """Where and how the RAPID units replace exact arithmetic."""
@@ -46,13 +71,20 @@ class ApproxConfig:
     # which divisions route through the logarithmic divider
     on_softmax: bool = True
     on_norm: bool = True
-    # backend-registry name (repro.core.backend) for EVERY routed op —
-    # matmuls and the whole divider family alike: "auto" resolves via
-    # env var / process default / hardware autodetect; or pin one of
-    # "jnp" | "pallas" | "pallas-interpret" explicitly.  A backend
-    # pinned at engine/trainstep build (ModelConfig.with_backend)
-    # therefore reaches every divide site, not just the matmuls.
-    backend: str = "auto"
+    # site -> backend-registry name (repro.core.backend) for every
+    # routed op — matmuls and the whole divider family alike.  Accepts a
+    # plain name ("every site"), a mapping over BACKEND_SITES +
+    # "default", or canonical tuple-of-pairs; each entry is "auto"
+    # (resolve via env var / process default / hardware autodetect) or
+    # an explicit registry name ("jnp" | "pallas" | "pallas-interpret").
+    # Per-site entries let one model mix execution paths — e.g. pallas
+    # fused-tail MLPs with partitioner-visible jnp logits.  A config
+    # pinned at engine/trainstep build (ModelConfig.with_backend /
+    # core.backend.pin_backends) therefore reaches every site.
+    backends: object = "auto"
+
+    def __post_init__(self):
+        object.__setattr__(self, "backends", _canon_backends(self.backends))
 
     @property
     def active(self) -> bool:
@@ -71,10 +103,41 @@ class ApproxConfig:
             return None
         return self.div_scheme if getattr(self, f"on_{site}") else None
 
+    def backend_for(self, site: str) -> str:
+        """Backend-registry name for one site ("default" = the fallback).
+
+        A site whose entry is absent *or* "auto" defers to the "default"
+        entry; "auto" there defers further to env/process-default/
+        hardware (see ``repro.core.backend.resolve_backend_name``).
+        """
+        if site != "default" and site not in BACKEND_SITES:
+            raise KeyError(
+                f"unknown backend site {site!r}; have {BACKEND_SITES}")
+        table = dict(self.backends)
+        name = table.get(site)
+        if site != "default" and name in (None, "auto"):
+            name = table.get("default")
+        return name or "auto"
+
+    def with_backends(self, backends) -> "ApproxConfig":
+        """Merge a site->backend mapping (a plain name resets all sites)."""
+        if isinstance(backends, str):
+            return dataclasses.replace(self, backends=backends)
+        merged = dict(self.backends)
+        merged.update(dict(backends))  # __post_init__ re-validates keys
+        return dataclasses.replace(self, backends=merged)
+
+    @property
+    def backend(self) -> str:
+        """Read-only alias for the *default* site entry (the whole map
+        used to be this one field); construct/replace with ``backends=``
+        or :meth:`with_backends`."""
+        return self.backend_for("default")
+
     @property
     def matmul_backend(self) -> str:
         """Read-only alias from before the divider family shared the
-        pin; construct/replace with ``backend=`` (the real field)."""
+        pin; see :attr:`backend`."""
         return self.backend
 
 
@@ -141,9 +204,13 @@ class ModelConfig:
         return dataclasses.replace(self, **kw)
 
     def with_backend(self, backend: str) -> "ModelConfig":
-        """Pin the approximate-arithmetic backend (registry name)."""
-        return self.with_(
-            approx=dataclasses.replace(self.approx, backend=backend))
+        """Pin one approximate-arithmetic backend for every site."""
+        return self.with_(approx=self.approx.with_backends(backend))
+
+    def with_site_backends(self, backends) -> "ModelConfig":
+        """Merge per-site backend overrides (see ApproxConfig.backends),
+        e.g. ``cfg.with_site_backends({"mlp": "pallas", "logits": "jnp"})``."""
+        return self.with_(approx=self.approx.with_backends(backends))
 
     def reduced(self) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests."""

@@ -8,9 +8,13 @@ Pallas TPU kernel, and the elementwise float ops.
 
 A backend bundles four entry points:
 
-  * ``matmul(x2, w2, scheme, *, chunk, bias, activation)`` — 2-D
-    ``[M, K] @ [K, N]`` approximate contraction in f32, with an optional
-    fused ``activation(out + bias)`` epilogue;
+  * ``matmul(x2, w2, scheme, *, chunk, bias, activation, residual,
+    epilogue)`` — 2-D ``[M, K] @ [K, N]`` approximate contraction in
+    f32, with an optional fused output-tile epilogue drawn from the
+    **epilogue menu** (see :class:`Epilogue`): any composition of
+    ``{bias, activation, residual-add, rms-normalize, softmax-combine}``
+    so a whole transformer block tail
+    ``norm(activation(x @ w + b) + residual)`` executes in one pass;
   * ``div(a, b, scheme)`` — elementwise approximate divide;
   * ``softmax_div(e, scheme, *, floor)`` — softmax combine:
     ``e / max(sum(e, -1), floor)``, denominator reduction + RAPID divide
@@ -28,7 +32,8 @@ Built-in backends:
   * ``pallas-interpret`` — same kernels under the Pallas interpreter
                            (CPU debugging / CI parity checks).
 
-The divider family shares canonical semantics with the fused kernels
+The divider family — and the epilogue menu's normalization stages —
+share canonical semantics with the fused kernels
 (``repro.kernels.fused_div.ref``): the denominator reduction runs over
 the 128-lane-padded row on every backend, so ``jnp`` and
 ``pallas-interpret`` agree bit-for-bit.
@@ -38,12 +43,20 @@ precedence: explicit argument > ``RAPID_BACKEND`` env var > process
 default (``set_default_backend``) > hardware autodetect (``pallas`` on
 TPU, ``jnp`` elsewhere).  ``None``/"auto" at a call site means "defer to
 the next level down".
+
+Per-site overrides: model code never picks a literal backend — it asks
+``ApproxConfig.backend_for(site)`` (sites: ``mlp`` / ``attn_proj`` /
+``logits`` / ``norm`` / ``softmax``), each of which resolves through the
+same selection function.  One model can therefore mix, e.g., pallas
+fused-tail MLP matmuls with partitioner-visible jnp logits;
+:func:`pin_backends` collapses every site to a concrete registry name
+once at engine/trainstep build time.
 """
 from __future__ import annotations
 
 import functools
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dataclass_replace
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -57,13 +70,17 @@ __all__ = [
     "ENV_VAR",
     "ACTIVATIONS",
     "SOFTMAX_FLOOR",
+    "Epilogue",
     "normalize_activation",
+    "as_epilogue",
     "apply_epilogue",
+    "apply_epilogue_tile",
     "register_backend",
     "get_backend",
     "available_backends",
     "resolve_backend_name",
     "set_default_backend",
+    "pin_backends",
     "matmul",
     "div",
     "softmax_div",
@@ -122,6 +139,127 @@ def apply_epilogue(out: jnp.ndarray, bias, activation: Optional[str]):
 
 
 # --------------------------------------------------------------------------
+# Epilogue menu: composable output-tile epilogues
+# --------------------------------------------------------------------------
+
+#: Normalization stages the epilogue menu offers.  Both reuse the fused
+#: divider kernels' canonical lane-padded denominator semantics
+#: (``repro.kernels.fused_div.ref``).
+EPILOGUE_NORMS = ("rms", "softmax")
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """What to apply to the output tile on its last K visit.
+
+    The full menu is ``norm(activation(out + bias) + residual)``; every
+    stage is optional.  Presence of the *bias* and *residual* stages is
+    decided by whether the corresponding operand is passed to the matmul
+    — this spec carries the purely-static part (hashable, so it can ride
+    jit static args and ``custom_vjp`` nondiff positions):
+
+      * ``activation``   — key of :data:`ACTIVATIONS` (None = identity);
+      * ``norm``         — None, "rms" (``z / sqrt(mean(z^2, -1) + eps)``)
+                           or "softmax" (``z / max(sum(z, -1), floor)``);
+      * ``div_scheme``   — RAPID divider scheme for the norm stage's
+                           divide (None = exact IEEE divide);
+      * ``eps`` / ``floor`` — the rms / softmax denominator constants;
+      * ``keep_prenorm`` — also return the value *before* the norm stage
+                           (the residual stream a pre-norm transformer
+                           block must carry forward), as ``(tail, pre)``.
+
+    The norm stages reduce over the output's last dim, so they require a
+    2-D weight (``qmatmul`` enforces this) and — on the Pallas backend —
+    an output tile spanning the full lane-padded row.
+    """
+
+    activation: Optional[str] = None
+    norm: Optional[str] = None
+    div_scheme: Optional[str] = None
+    eps: float = 1e-6
+    floor: float = SOFTMAX_FLOOR
+    keep_prenorm: bool = False
+
+    @property
+    def wants_norm_lut(self) -> bool:
+        """Whether the norm stage needs an on-device divider LUT."""
+        return self.norm is not None and self.div_scheme is not None
+
+    @property
+    def is_identity(self) -> bool:
+        return self.activation is None and self.norm is None
+
+
+def as_epilogue(epilogue: Optional[Epilogue],
+                activation: Optional[str] = None) -> Epilogue:
+    """Canonicalize/validate the (epilogue, activation) call-site pair.
+
+    ``activation=`` is the historical sugar for the activation-only
+    epilogue; passing both it and a full spec is ambiguous and raises.
+    """
+    if epilogue is None:
+        return Epilogue(activation=normalize_activation(activation))
+    if not isinstance(epilogue, Epilogue):
+        raise TypeError(f"epilogue must be an Epilogue, got {epilogue!r}")
+    if normalize_activation(activation) is not None:
+        raise ValueError("pass the activation inside the Epilogue spec, "
+                         "not alongside it")
+    if epilogue.norm is not None and epilogue.norm not in EPILOGUE_NORMS:
+        raise KeyError(f"unknown epilogue norm {epilogue.norm!r}; "
+                       f"have {EPILOGUE_NORMS}")
+    if epilogue.keep_prenorm and epilogue.norm is None:
+        raise ValueError("keep_prenorm without a norm stage is meaningless")
+    act = normalize_activation(epilogue.activation)
+    if act != epilogue.activation:
+        epilogue = dataclass_replace(epilogue, activation=act)
+    return epilogue
+
+
+def apply_epilogue_tile(z, bias, residual, ep: Epilogue, *, n: int,
+                        div_lut=None):
+    """Canonical epilogue-menu semantics on one lane-padded row slab.
+
+    ``z`` is ``[rows, n_pad]`` f32 with the real width ``n`` zero-padded
+    to a multiple of ``fused_div.ref.LANE``; ``bias`` (``[n_pad]``) and
+    ``residual`` (``[rows, n_pad]``) are zero-padded the same way.  Used
+    *verbatim* by the jnp oracle and the Pallas kernel epilogue, so the
+    two backends agree bit-for-bit by construction.
+
+    Pad-lane invariant: every elementwise stage maps exact zeros to
+    exact zeros (zero bias/residual pads; every :data:`ACTIVATIONS`
+    entry satisfies ``f(0) == 0``), so the canonical lane-padded
+    denominator reductions (``ref.softmax_denom`` / ``ref.rms_denom``)
+    only ever see inert zeros in the pad lanes.  A future activation
+    with ``f(0) != 0`` would need a pad mask here.
+
+    Compilation-context note: compositions where a mul-tailed activation
+    (silu/gelu — their last op is a multiply) feeds the residual add are
+    rewritten by XLA when the whole chain sits in one compiled module
+    (the divide inside the sigmoid is reformulated against the trailing
+    add; optimization barriers do not block it).  Bit-parity for those
+    compositions therefore holds between two *compiled* executions —
+    which is how models always run — not between eager jnp and a jitted
+    kernel; the parity sweep jits the oracle side accordingly.
+    """
+    if bias is not None:
+        z = z + bias[None, :]
+    if ep.activation is not None:
+        z = ACTIVATIONS[ep.activation](z)
+    if residual is not None:
+        z = z + residual
+    pre = z
+    if ep.norm == "softmax":
+        denom = fdref.softmax_denom(z, ep.floor)
+        z = (fa.log_div_f32(z, denom, div_lut)
+             if ep.div_scheme is not None else z / denom)
+    elif ep.norm == "rms":
+        denom = fdref.rms_denom(z, n, ep.eps)
+        z = (fa.log_div_f32(z, denom, div_lut)
+             if ep.div_scheme is not None else z / denom)
+    return (z, pre) if ep.keep_prenorm else z
+
+
+# --------------------------------------------------------------------------
 # jnp scan formulation (moved here from core/ops.py so the registry owns
 # every execution path; ops.py re-exports it for the kernels' oracles).
 # --------------------------------------------------------------------------
@@ -157,19 +295,46 @@ def log_matmul_scan(
     return acc
 
 
-def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None):
+def _finish_epilogue_jnp(out, bias, residual, ep: Epilogue):
+    """Apply the epilogue menu to an unpadded [M, N] jnp matmul output.
+
+    Elementwise-only epilogues run unpadded (bit-equal to the padded
+    form lane by lane); norm epilogues lane-pad first so the canonical
+    tile semantics — shared verbatim with the kernel — see the same
+    reduction operand width, then slice the pads back off.
+    """
+    if ep.norm is None:
+        return apply_epilogue_tile(out, bias, residual, ep, n=out.shape[-1])
+    n = out.shape[-1]
+    div_lut = (fa.div_lut_device(ep.div_scheme)
+               if ep.div_scheme is not None else None)
+    res = apply_epilogue_tile(
+        fdref.pad_lanes(out),
+        None if bias is None else fdref.pad_lanes(bias),
+        None if residual is None else fdref.pad_lanes(residual),
+        ep, n=n, div_lut=div_lut)
+    if ep.keep_prenorm:
+        return res[0][:, :n], res[1][:, :n]
+    return res[:, :n]
+
+
+def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
+                residual=None, epilogue: Optional[Epilogue] = None):
+    ep = as_epilogue(epilogue, activation)
     lut = fa.mul_lut_device(scheme)
     out = log_matmul_scan(x2, w2, lut, chunk)
-    return apply_epilogue(out, bias, activation)
+    return _finish_epilogue_jnp(out, bias, residual, ep)
 
 
 def _matmul_pallas(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
+                   residual=None, epilogue: Optional[Epilogue] = None,
                    interpret: Optional[bool] = None):
     # chunk is a jnp-path tuning knob; the kernel has its own block sizes.
     del chunk
     from repro.kernels.log_matmul.ops import log_matmul
 
     return log_matmul(x2, w2, scheme, bias=bias, activation=activation,
+                      residual=residual, epilogue=epilogue,
                       interpret=interpret)
 
 
@@ -301,6 +466,24 @@ def resolve_backend_name(name: Optional[str] = None) -> str:
 def get_backend(name: Optional[str] = None) -> Backend:
     """Resolve ``name`` (or the ambient default) to a Backend."""
     return _REGISTRY[resolve_backend_name(name)]
+
+
+def pin_backends(acfg, override: Optional[str] = None):
+    """Collapse an ApproxConfig's site->backend map to concrete names.
+
+    Every site (plus the default) is resolved through
+    :func:`resolve_backend_name` exactly once, so engines / train steps
+    built from the returned config cannot have env-var changes silently
+    flip the compiled kernel choice inside a later trace.  ``override``
+    (an explicit registry name) wins at every site.
+    """
+    from repro.configs.base import BACKEND_SITES  # local: avoid cycle
+
+    sites = {
+        site: resolve_backend_name(override or acfg.backend_for(site))
+        for site in ("default",) + BACKEND_SITES
+    }
+    return dataclass_replace(acfg, backends=sites)
 
 
 def matmul(x2, w2, scheme, *, backend: Optional[str] = None, **kw):

@@ -58,17 +58,26 @@ leading batch dims and ``w`` arbitrary *trailing* output dims (e.g. a
 vmaps shared *leading* batch dims on both operands (e.g. per-expert MoE
 weights ``(E, K, N)`` against ``(E, C, K)`` token buffers).
 
-Fused epilogue
---------------
-``bias`` and ``activation`` are fused into the matmul epilogue on every
-backend: the jnp path applies ``activation(out + bias)`` on the scan
-accumulator; the Pallas kernel applies the same expression to the output
-tile on its last K-grid visit while it is still resident in VMEM.
+Fused epilogue menu
+-------------------
+``bias``, ``activation``, ``residual`` and a full ``epilogue`` spec
+(:class:`repro.core.backend.Epilogue`) are fused into the matmul
+epilogue on every backend: any composition drawn from ``{bias,
+activation, residual-add, rms-normalize, softmax-combine}``, i.e. a
+whole transformer block tail ``norm(activation(x @ w + b) + residual)``.
+The jnp path applies the canonical expression on the scan accumulator;
+the Pallas kernel applies the *same* expression
+(``backend.apply_epilogue_tile``) to the output tile on its last K-grid
+visit while it is still resident in VMEM — the normalization epilogues
+reuse the fused divider kernels' lane-padded denominator semantics
+(``repro.kernels.fused_div.ref``) with the RAPID approximate divider.
+``Epilogue.keep_prenorm`` additionally returns the pre-norm value (the
+residual stream a pre-norm block carries forward) from the same pass.
 
 Gradients: RAPID forward ops are near-unbiased (paper SS IV-A, SS V-B), so
 training uses straight-through exact gradients (standard QAT practice);
-the epilogue backward differentiates the activation at the *exact*
-pre-activation value.
+the epilogue backward differentiates the *exact* composition (activation
+at the exact pre-activation value, norm as the ideal quotient).
 """
 from __future__ import annotations
 
@@ -102,84 +111,139 @@ def qmatmul(
     *,
     bias: Optional[jnp.ndarray] = None,
     activation: Optional[str] = None,
-) -> jnp.ndarray:
+    residual: Optional[jnp.ndarray] = None,
+    epilogue: Optional[be.Epilogue] = None,
+):
     """Contract the last dim of ``x`` with the first dim of ``w``.
 
     ``scheme=None`` (or "exact") is the accurate MXU path; any RAPID/
     Mitchell scheme name routes through the logarithmic multiplier on the
     backend selected by ``backend`` (see module docstring for the
     resolution order).  Output dtype follows ``x``; RAPID internals are
-    f32.  ``bias`` must have shape ``w.shape[1:]`` and ``activation`` is
-    a key of ``repro.core.backend.ACTIVATIONS``; both are fused into the
-    matmul epilogue as ``activation(out + bias)``.
+    f32.
+
+    Epilogue menu: ``bias`` (shape ``w.shape[1:]``), ``activation``
+    (sugar for ``Epilogue(activation=...)``), ``residual`` (the output's
+    shape) and a full ``epilogue`` spec are fused into the matmul
+    epilogue as ``norm(activation(out + bias) + residual)``.  The norm
+    stages reduce over the output's last dim and therefore require a 2-D
+    ``w``; with ``epilogue.keep_prenorm`` the result is the pair
+    ``(tail, pre_norm)``.
 
     The exact path is a *plain* dot (fully transparent to autodiff and
-    remat policies); the approximate path is a custom_vjp with straight-
-    through exact gradients.
+    remat policies; its norm stage routes through the registry divider
+    ops, so an exact matmul can still carry a RAPID-divider norm tail);
+    the approximate path is a custom_vjp with straight-through exact
+    gradients.
     """
-    activation = be.normalize_activation(activation)
+    ep = be.as_epilogue(epilogue, activation)
     if bias is not None and bias.shape != w.shape[1:]:
         raise ValueError(f"bias shape {bias.shape} != w.shape[1:] {w.shape[1:]}")
+    if ep.norm is not None and w.ndim != 2:
+        raise ValueError(
+            f"norm epilogues reduce over the output's last dim and need a "
+            f"2-D weight; got w.shape={w.shape}")
+    out_shape = x.shape[:-1] + w.shape[1:]
+    if residual is not None and residual.shape != out_shape:
+        raise ValueError(
+            f"residual shape {residual.shape} != output shape {out_shape}")
     if scheme in (None, "exact"):
         out = jax.lax.dot_general(
             x, w, (((x.ndim - 1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
-        # same epilogue semantics as the approximate backends: bias add
-        # and activation in f32, then cast to the input dtype
+        # same epilogue semantics as the approximate backends: the whole
+        # menu in f32, then cast to the input dtype
         if bias is not None:
             out = out + bias
-        if activation is not None:
-            out = be.ACTIVATIONS[activation](out)
+        if ep.activation is not None:
+            out = be.ACTIVATIONS[ep.activation](out)
+        if residual is not None:
+            out = out + residual.astype(jnp.float32)
+        pre = out
+        if ep.norm == "softmax":
+            out = qsoftmax_div(out, ep.div_scheme, backend, floor=ep.floor)
+        elif ep.norm == "rms":
+            out = qrms_div(out, ep.eps, ep.div_scheme, backend)
+        if ep.keep_prenorm:
+            return out.astype(x.dtype), pre.astype(x.dtype)
         return out.astype(x.dtype)
     backend = be.resolve_backend_name(backend)
-    return _qmatmul_approx(x, w, bias, scheme, chunk, backend, activation)
+    return _qmatmul_approx(x, w, bias, residual, scheme, chunk, backend, ep)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _exact_tail(x, w, bias, residual, ep: be.Epilogue):
+    """The ideal (exact-arithmetic) composition the backward pass
+    differentiates — straight-through gradients for the whole menu."""
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    w2 = w.reshape(k, -1).astype(jnp.float32)
+    z = jnp.dot(x2, w2)
+    if bias is not None:
+        z = z + bias.astype(jnp.float32).reshape(-1)[None, :]
+    if ep.activation is not None:
+        z = be.ACTIVATIONS[ep.activation](z)
+    if residual is not None:
+        z = z + residual.astype(jnp.float32).reshape(z.shape)
+    pre = z
+    if ep.norm == "softmax":
+        z = z / jnp.maximum(jnp.sum(z, axis=-1, keepdims=True), ep.floor)
+    elif ep.norm == "rms":
+        z = z / jnp.sqrt(jnp.mean(jnp.square(z), axis=-1, keepdims=True)
+                         + ep.eps)
+    out_shape = x.shape[:-1] + w.shape[1:]
+    if ep.keep_prenorm:
+        return z.reshape(out_shape), pre.reshape(out_shape)
+    return z.reshape(out_shape)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def _qmatmul_approx(
     x: jnp.ndarray,
     w: jnp.ndarray,
     bias: Optional[jnp.ndarray],
+    residual: Optional[jnp.ndarray],
     scheme: str,
     chunk: int = 64,
     backend: str = "jnp",
-    activation: Optional[str] = None,
-) -> jnp.ndarray:
+    ep: be.Epilogue = be.Epilogue(),
+):
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k).astype(jnp.float32)
     w2 = w.reshape(k, -1).astype(jnp.float32)
     b2 = None if bias is None else bias.astype(jnp.float32).reshape(-1)
+    r2 = (None if residual is None
+          else residual.astype(jnp.float32).reshape(x2.shape[0], w2.shape[1]))
     out = be.matmul(x2, w2, scheme, backend=backend, chunk=chunk,
-                    bias=b2, activation=activation)
-    return out.reshape(*lead, *w.shape[1:]).astype(x.dtype)
+                    bias=b2, residual=r2, epilogue=ep)
+    shape = (*lead, *w.shape[1:])
+    if ep.keep_prenorm:
+        tail, pre = out
+        return tail.reshape(shape).astype(x.dtype), \
+            pre.reshape(shape).astype(x.dtype)
+    return out.reshape(shape).astype(x.dtype)
 
 
-def _qmatmul_fwd(x, w, bias, scheme, chunk, backend, activation):
-    out = _qmatmul_approx(x, w, bias, scheme, chunk, backend, activation)
-    return out, (x, w, bias)
+def _qmatmul_fwd(x, w, bias, residual, scheme, chunk, backend, ep):
+    out = _qmatmul_approx(x, w, bias, residual, scheme, chunk, backend, ep)
+    return out, (x, w, bias, residual)
 
 
-def _qmatmul_bwd(scheme, chunk, backend, activation, res, g):
-    # straight-through: exact transposed contractions for the cotangents,
-    # with the activation differentiated at the exact pre-activation value
-    x, w, bias = res
-    k = x.shape[-1]
-    x2 = x.reshape(-1, k).astype(jnp.float32)
-    w2 = w.reshape(k, -1).astype(jnp.float32)
-    g2 = g.reshape(-1, w2.shape[1]).astype(jnp.float32)
-    if activation is not None:
-        z = jnp.dot(x2, w2)
-        if bias is not None:
-            z = z + bias.astype(jnp.float32).reshape(-1)[None, :]
-        _, pullback = jax.vjp(be.ACTIVATIONS[activation], z)
-        (g2,) = pullback(g2)
-    dx = jnp.dot(g2, w2.T).reshape(x.shape).astype(x.dtype)
-    dw = jnp.dot(x2.T, g2).reshape(w.shape).astype(w.dtype)
-    db = (None if bias is None
-          else g2.sum(axis=0).reshape(bias.shape).astype(bias.dtype))
-    return dx, dw, db
+def _qmatmul_bwd(scheme, chunk, backend, ep, res, g):
+    # straight-through: differentiate the exact composition (activation
+    # at the exact pre-activation value, norm as the ideal quotient)
+    x, w, bias, residual = res
+    _, pullback = jax.vjp(
+        lambda x, w, bias, residual: _exact_tail(x, w, bias, residual, ep),
+        x, w, bias, residual)
+    gf = jax.tree.map(lambda t: t.astype(jnp.float32), g)
+    dx, dw, db, dr = pullback(gf)
+    dx = dx.astype(x.dtype)
+    dw = dw.astype(w.dtype)
+    db = None if bias is None else db.astype(bias.dtype)
+    dr = None if residual is None else dr.astype(residual.dtype)
+    return dx, dw, db, dr
 
 
 _qmatmul_approx.defvjp(_qmatmul_fwd, _qmatmul_bwd)

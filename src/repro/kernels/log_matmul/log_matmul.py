@@ -16,12 +16,20 @@ accumulates into the output tile (revisited across the K dimension).
 VMEM working set: bm*bk + bk*bn + bm*bn floats + the 1 KiB coefficient
 LUT.  MXU is untouched; arithmetic is pure VPU int32.
 
-Fused epilogue: an optional ``activation(out + bias)`` is applied to the
-output tile on its *last* K-grid visit, while it is still resident in
-VMEM — the bias add and activation cost no extra HBM round-trip.  The
-activation functions are shared with the jnp scan path (see
-``repro.core.backend.ACTIVATIONS``), so the two backends agree bit-for-
-bit on identically-ordered accumulations.
+Fused epilogue menu: an optional composition of ``{bias, activation,
+residual-add, rms-normalize, softmax-combine}`` is applied to the output
+tile on its *last* K-grid visit, while it is still resident in VMEM — a
+whole block tail ``norm(activation(out + bias) + residual)`` costs no
+extra HBM round-trip, with the normalization divides running through
+the RAPID approximate divider.  The epilogue expression is
+``repro.core.backend.apply_epilogue_tile``, shared *verbatim* with the
+jnp scan path, so the two backends agree bit-for-bit on identically-
+ordered accumulations; the norm stages additionally require the output
+tile to span the full lane-padded row (``bn == n_pad``; ops.py arranges
+this), matching the canonical lane-padded denominator semantics of
+``repro.kernels.fused_div.ref``.  With ``Epilogue.keep_prenorm`` the
+kernel emits a second output holding the value before the norm stage —
+the residual stream a pre-norm transformer block carries forward.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.backend import ACTIVATIONS
+from repro.core.backend import Epilogue, apply_epilogue_tile
 
 F32_BIAS = 127 << 23
 F32_ABS = 0x7FFFFFFF
@@ -62,12 +70,16 @@ def _approx_prod(bx_col: jnp.ndarray, bw_row: jnp.ndarray, lut: jnp.ndarray):
 
 
 def _kernel(x_ref, w_ref, lut_ref, *rest, bk: int, unroll: int, nk: int,
-            activation, has_bias: bool):
+            ep: Epilogue, has_bias: bool, has_residual: bool, n: int):
     """Accumulate one (bm, bn) output tile over the current K block."""
-    if has_bias:
-        bias_ref, o_ref = rest
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    res_ref = refs.pop(0) if has_residual else None
+    dlut_ref = refs.pop(0) if ep.wants_norm_lut else None
+    if ep.keep_prenorm:
+        o_ref, pre_ref = refs
     else:
-        (o_ref,) = rest
+        (o_ref,) = refs
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -87,45 +99,65 @@ def _kernel(x_ref, w_ref, lut_ref, *rest, bk: int, unroll: int, nk: int,
     acc = jax.lax.fori_loop(0, bk // unroll, body, acc)
     o_ref[...] += acc
 
-    if has_bias or activation is not None:
-        # epilogue on the tile's final K visit, while it sits in VMEM
+    if has_bias or has_residual or not ep.is_identity:
+        # epilogue menu on the tile's final K visit, while it sits in
+        # VMEM — the shared canonical expression (apply_epilogue_tile)
         @pl.when(pl.program_id(2) == nk - 1)
         def _epilogue():
-            z = o_ref[...]
-            if has_bias:
-                z = z + bias_ref[...][None, :]
-            if activation is not None:
-                z = ACTIVATIONS[activation](z)
-            o_ref[...] = z
+            out = apply_epilogue_tile(
+                o_ref[...],
+                bias_ref[...] if has_bias else None,
+                res_ref[...] if has_residual else None,
+                ep, n=n,
+                div_lut=dlut_ref[...] if dlut_ref is not None else None)
+            if ep.keep_prenorm:
+                o_ref[...], pre_ref[...] = out
+            else:
+                o_ref[...] = out
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "unroll", "activation", "interpret"),
+    static_argnames=("bm", "bn", "bk", "unroll", "epilogue", "n", "interpret"),
 )
 def log_matmul_pallas(
     x: jnp.ndarray,
     w: jnp.ndarray,
     lut: jnp.ndarray,
     bias: jnp.ndarray | None = None,
+    residual: jnp.ndarray | None = None,
+    div_lut: jnp.ndarray | None = None,
     *,
     bm: int = 256,
     bn: int = 256,
     bk: int = 512,
     unroll: int = 8,
-    activation: str | None = None,
+    epilogue: Epilogue = Epilogue(),
+    n: int | None = None,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """x[M,K] @ w[K,N] with RAPID approximate products. f32 in/out.
+):
+    """x[M,K] @ w[K,N_pad] with RAPID approximate products. f32 in/out.
 
-    M, N, K must be divisible by the block sizes (ops.py pads); ``bias``
-    (if given) is [N] and fused together with ``activation`` into the
-    output tile's last K visit.
+    M, N_pad, K must be divisible by the block sizes (ops.py pads);
+    ``bias`` ([N_pad]) / ``residual`` ([M, N_pad]) and the ``epilogue``
+    spec are fused into the output tile's last K visit.  ``n`` is the
+    real (pre-padding) output width the rms norm stage averages over;
+    norm epilogues additionally require ``bn == N_pad`` (whole rows per
+    tile) and ``div_lut`` when ``epilogue.div_scheme`` is set.  Returns
+    the tail, or ``(tail, pre_norm)`` when ``epilogue.keep_prenorm``.
     """
     m, k = x.shape
-    _, n = w.shape
-    grid = (m // bm, n // bn, k // bk)
+    _, npad = w.shape
+    if n is None:
+        n = npad
+    if epilogue.norm is not None and bn != npad:
+        raise ValueError(
+            f"norm epilogue needs whole rows per tile: bn={bn} != N={npad}")
+    if epilogue.wants_norm_lut and div_lut is None:
+        raise ValueError("epilogue.div_scheme set but no div_lut operand")
+    grid = (m // bm, npad // bn, k // bk)
     has_bias = bias is not None
+    has_residual = residual is not None
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
@@ -135,13 +167,26 @@ def log_matmul_pallas(
     if has_bias:
         in_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
         operands.append(bias)
+    if has_residual:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        operands.append(residual)
+    if epilogue.wants_norm_lut:
+        in_specs.append(pl.BlockSpec((256,), lambda i, j, kk: (0,)))
+        operands.append(div_lut)
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, npad), jnp.float32)
+    if epilogue.keep_prenorm:
+        out_specs, out_shapes = [out_spec, out_spec], [out_shape, out_shape]
+    else:
+        out_specs, out_shapes = out_spec, out_shape
     return pl.pallas_call(
         functools.partial(_kernel, bk=bk, unroll=unroll, nk=grid[2],
-                          activation=activation, has_bias=has_bias),
+                          ep=epilogue, has_bias=has_bias,
+                          has_residual=has_residual, n=n),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shapes,
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
         ) if not interpret else None,

@@ -5,17 +5,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import float_approx as fa
-from repro.core.backend import normalize_activation
+from repro.core.backend import Epilogue, as_epilogue
+from repro.kernels.fused_div import ref as fdref
 from repro.kernels.log_matmul.log_matmul import log_matmul_pallas
 
 __all__ = ["log_matmul"]
 
 
 def _pick_blocks(m: int, n: int, k: int):
-    """Choose hardware-aligned block sizes that fit comfortably in VMEM."""
-    bm = min(256, max(8, m))
-    bn = min(256, max(128, n))
-    bk = min(512, max(128, k))
+    """Choose hardware-aligned block sizes that fit comfortably in VMEM.
+
+    Every block is clamped to the problem size *rounded up to the
+    minimum tile* (8 sublanes x 128 lanes for f32): degenerate dims
+    smaller than a tile used to leak through as unaligned block shapes,
+    and a K dim between 128 and 512 that was not a multiple of the
+    unroll factor silently dropped its tail elements
+    (``bk // unroll`` truncated — the smoke-mode shapes exposed this).
+    Keeping bk a multiple of 128 keeps it a multiple of any unroll <= 8.
+    """
+    bm = min(256, -(-m // 8) * 8)
+    bn = min(256, -(-n // 128) * 128)
+    bk = min(512, -(-k // 128) * 128)
     return bm, bn, bk
 
 
@@ -26,28 +36,50 @@ def log_matmul(
     *,
     bias: jnp.ndarray | None = None,
     activation: str | None = None,
+    residual: jnp.ndarray | None = None,
+    epilogue: Epilogue | None = None,
     blocks=None,
     interpret: bool | None = None,
-) -> jnp.ndarray:
+):
     """RAPID approximate x @ w (f32). Pads every dim to the block grid.
 
-    ``bias`` ([N]) and ``activation`` (a ``repro.core.backend.ACTIVATIONS``
-    key) are fused into the kernel's output-tile epilogue.
+    ``bias`` ([N]) / ``residual`` ([M, N]) and the ``epilogue`` spec
+    (``repro.core.backend.Epilogue`` — activation, rms/softmax norm
+    stages; ``activation=`` remains the activation-only sugar) are fused
+    into the kernel's output-tile epilogue on its last K visit.  Norm
+    epilogues force whole lane-padded rows per output tile so the
+    canonical padded-row denominator semantics hold.  Returns the tail,
+    or ``(tail, pre_norm)`` when ``epilogue.keep_prenorm``.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    activation = normalize_activation(activation)
+    ep = as_epilogue(epilogue, activation)
     lut = fa.mul_lut_device(scheme)
     m, k = x.shape
     _, n = w.shape
     bm, bn, bk = blocks or _pick_blocks(m, n, k)
+    if ep.norm is not None:
+        # whole lane-padded rows per output tile (canonical denominator
+        # semantics); rebalance bm/bk so the VMEM working set stays
+        # bounded when N is a real model width — <= 1 MiB of f32 per
+        # bm-row slab (out / pre / residual) and <= 2 MiB for the w slab
+        bn = fdref.padded_width(n)
+        bm = max(8, min(bm, ((1 << 18) // bn) // 8 * 8))
+        bk = max(128, min(bk, ((1 << 19) // bn) // 128 * 128))
+    unroll = 8 if bk % 8 == 0 else 1
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
     wp = jnp.pad(w.astype(jnp.float32), ((0, pk), (0, pn)))
     bp = None
     if bias is not None:
         bp = jnp.pad(bias.astype(jnp.float32), (0, pn))
-    out = log_matmul_pallas(xp, wp, lut, bp, bm=bm, bn=bn, bk=bk,
-                            unroll=min(8, bk), activation=activation,
+    rp = None
+    if residual is not None:
+        rp = jnp.pad(residual.astype(jnp.float32), ((0, pm), (0, pn)))
+    dlut = fa.div_lut_device(ep.div_scheme) if ep.wants_norm_lut else None
+    out = log_matmul_pallas(xp, wp, lut, bp, rp, dlut, bm=bm, bn=bn, bk=bk,
+                            unroll=min(unroll, bk), epilogue=ep, n=n,
                             interpret=interpret)
+    if ep.keep_prenorm:
+        return out[0][:m, :n], out[1][:m, :n]
     return out[:m, :n]

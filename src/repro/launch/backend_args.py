@@ -1,0 +1,63 @@
+"""Shared launcher plumbing for backend-registry CLI flags.
+
+Every launcher (train / serve / dryrun) exposes the same two flags:
+
+  ``--backend NAME``            one registry name for every site;
+  ``--site-backend SITE=NAME``  repeatable per-site override (sites:
+                                mlp / attn_proj / logits / norm /
+                                softmax / default)
+
+so one command line can mix execution paths — e.g. pallas fused-tail
+MLP matmuls with partitioner-visible jnp logits::
+
+  python -m repro.launch.serve --arch yi_6b --reduced --approx \
+      --backend pallas --site-backend logits=jnp
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["add_backend_args", "apply_backend_args", "parse_site_backends"]
+
+
+def add_backend_args(ap) -> None:
+    """Attach the shared --backend / --site-backend flags to a parser."""
+    ap.add_argument("--backend", default=None,
+                    help="approximate-arithmetic backend registry name "
+                         "for every site (jnp | pallas | pallas-interpret"
+                         " | auto)")
+    ap.add_argument("--site-backend", action="append", default=[],
+                    metavar="SITE=NAME",
+                    help="per-site backend override (site: mlp | "
+                         "attn_proj | logits | norm | softmax | default);"
+                         " repeatable, e.g. --site-backend mlp=pallas "
+                         "--site-backend logits=jnp")
+
+
+def parse_site_backends(entries: Iterable[str]) -> dict:
+    """Parse repeated ``SITE=NAME`` strings into a site->backend map."""
+    table = {}
+    for entry in entries:
+        site, sep, name = entry.partition("=")
+        if not sep or not site or not name:
+            raise SystemExit(
+                f"--site-backend expects SITE=NAME, got {entry!r}")
+        table[site] = name
+    return table
+
+
+def apply_backend_args(cfg: ModelConfig, args) -> ModelConfig:
+    """Fold the parsed flags into the config's per-site backend map.
+
+    ``--backend`` resets every site first; ``--site-backend`` entries
+    then override individual sites (validation of site keys happens in
+    ``ApproxConfig``, of registry names at resolve time).
+    """
+    if getattr(args, "backend", None):
+        cfg = cfg.with_backend(args.backend)
+    sites = parse_site_backends(getattr(args, "site_backend", []) or [])
+    if sites:
+        cfg = cfg.with_site_backends(sites)
+    return cfg

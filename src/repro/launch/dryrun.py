@@ -80,7 +80,8 @@ def model_flops(cfg, shape_name: str) -> float:
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-             approx: bool = False, force: bool = False) -> dict:
+             approx: bool = False, force: bool = False,
+             backend: str = None, site_backends: dict = None) -> dict:
     mesh_tag = "pod2" if multi_pod else "pod1"
     tag = f"{arch}__{shape_name}__{mesh_tag}" + ("__rapid" if approx else "")
     out_path = OUT_DIR / f"{tag}.json"
@@ -90,6 +91,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     cfg = get_config(arch)
     if approx:
         cfg = cfg.with_(approx=RAPID)
+    if backend:
+        cfg = cfg.with_backend(backend)
+    if site_backends:
+        cfg = cfg.with_site_backends(site_backends)
     reason = skip_reason(cfg, shape_name)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
            "approx": approx, "time": time.strftime("%F %T")}
@@ -227,7 +232,10 @@ def main():
     ap.add_argument("--approx", action="store_true",
                     help="RAPID approximate mode (paper technique on)")
     ap.add_argument("--force", action="store_true")
+    from repro.launch.backend_args import add_backend_args, parse_site_backends
+    add_backend_args(ap)
     args = ap.parse_args()
+    site_backends = parse_site_backends(args.site_backend)
 
     cells = []
     if args.all:
@@ -242,7 +250,8 @@ def main():
     for arch, shape in cells:
         try:
             rec = run_cell(arch, shape, multi_pod=args.multi_pod,
-                           approx=args.approx, force=args.force)
+                           approx=args.approx, force=args.force,
+                           backend=args.backend, site_backends=site_backends)
             if "skipped" in rec:
                 skip += 1
                 print(f"[SKIP] {arch} {shape}: {rec['skipped'][:80]}")

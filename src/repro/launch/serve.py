@@ -10,6 +10,7 @@ import time
 import jax
 
 from repro.configs.base import ARCH_IDS, RAPID, get_config
+from repro.launch.backend_args import add_backend_args, apply_backend_args
 from repro.models.layers import ParallelCtx
 from repro.models.model import Model
 from repro.serve.engine import ServeEngine
@@ -24,6 +25,7 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    add_backend_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -31,6 +33,7 @@ def main():
         cfg = cfg.reduced()
     if args.approx:
         cfg = cfg.with_(approx=RAPID)
+    cfg = apply_backend_args(cfg, args)
     assert cfg.family not in ("encdec", "vlm"), \
         "serve demo targets pure-text archs (frontend stubs need batches)"
 

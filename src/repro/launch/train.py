@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, RAPID, get_config
 from repro.data.pipeline import SyntheticLM
+from repro.launch.backend_args import add_backend_args, apply_backend_args
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.layers import ParallelCtx
 from repro.models.model import Model
@@ -30,6 +31,7 @@ def main():
                     help="tiny same-family config (CPU smoke scale)")
     ap.add_argument("--approx", action="store_true",
                     help="enable RAPID approximate mul/div")
+    add_backend_args(ap)
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -46,6 +48,7 @@ def main():
         cfg = cfg.reduced()
     if args.approx:
         cfg = cfg.with_(approx=RAPID)
+    cfg = apply_backend_args(cfg, args)
 
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)

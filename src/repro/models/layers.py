@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ApproxConfig, ModelConfig
-from repro.core.backend import SOFTMAX_FLOOR
+from repro.core.backend import SOFTMAX_FLOOR, Epilogue
 from repro.core.ops import qdiv, qmatmul, qrms_div, qsoftmax_div
 from repro.models.params import P
 
@@ -99,16 +99,19 @@ class ParallelCtx:
 # dense / norms / rope
 # --------------------------------------------------------------------------
 
-def dense(x, w, acfg: ApproxConfig, site: str, bias=None, activation=None):
+def dense(x, w, acfg: ApproxConfig, site: str, bias=None, activation=None,
+          residual=None, epilogue=None):
     """x @ w with optional RAPID multiplier at this site.
 
-    ``bias``/``activation`` ride the fused matmul epilogue (exact and
-    approximate backends alike); the backend itself comes from the
-    registry via ``acfg.backend`` ("auto" defers to env/default/
-    hardware — see repro.core.backend).
+    ``bias``/``activation``/``residual``/``epilogue`` ride the fused
+    matmul epilogue menu (exact and approximate backends alike); the
+    backend comes from the registry via the *per-site* override
+    ``acfg.backend_for(site)`` ("auto" defers to env/default/hardware —
+    see repro.core.backend).
     """
-    return qmatmul(x, w, acfg.mul(site), backend=acfg.backend,
-                   bias=bias, activation=activation)
+    return qmatmul(x, w, acfg.mul(site), backend=acfg.backend_for(site),
+                   bias=bias, activation=activation, residual=residual,
+                   epilogue=epilogue)
 
 
 def norm_params(cfg: ModelConfig, kind: str = "rms") -> dict:
@@ -123,7 +126,7 @@ def rms_norm(x, params, eps: float, acfg: ApproxConfig):
     # divide fused in one registry op (one kernel launch on the pallas
     # backend, engine-pinnable)
     xf = x.astype(jnp.float32)
-    y = qrms_div(xf, eps, acfg.div("norm"), backend=acfg.backend)
+    y = qrms_div(xf, eps, acfg.div("norm"), backend=acfg.backend_for("norm"))
     return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
 
 
@@ -131,7 +134,8 @@ def layer_norm(x, params, eps: float, acfg: ApproxConfig):
     # layer norm == rms normalize of the centred activations
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
-    y = qrms_div(xf - mu, eps, acfg.div("norm"), backend=acfg.backend)
+    y = qrms_div(xf - mu, eps, acfg.div("norm"),
+                 backend=acfg.backend_for("norm"))
     y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
     return y.astype(x.dtype)
 
@@ -179,7 +183,8 @@ def _online_softmax_combine(acc, l, m, acfg: ApproxConfig):
     sch = acfg.div("softmax")
     l = jnp.maximum(l, SOFTMAX_FLOOR)
     if sch:
-        return qdiv(acc, l[..., None], sch, backend=acfg.backend)
+        return qdiv(acc, l[..., None], sch,
+                    backend=acfg.backend_for("softmax"))
     return acc / l[..., None]
 
 
@@ -252,7 +257,7 @@ def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
         e = jnp.exp(s - m)
         # fused softmax combine: row-sum + floor + RAPID divide in one
         # registry op (single VMEM pass on the pallas backend)
-        p = qsoftmax_div(e, sch, backend=acfg.backend)
+        p = qsoftmax_div(e, sch, backend=acfg.backend_for("softmax"))
     else:
         p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
@@ -307,11 +312,20 @@ _PLAIN_ATTN_MAX_T = 8192
 
 def attention(x, params, cfg: ModelConfig, ctx: ParallelCtx, positions,
               kv_x=None, kv_positions=None, causal: bool = True,
-              chunk: int = 1024):
+              chunk: int = 1024, residual=None, tail_norm: bool = False):
     """Full-sequence (train / prefill) GQA attention.
 
     Returns (out [B,S,D], k [B,T,KV,hd], v) — callers keep k/v for caches.
     ``kv_x`` switches to cross-attention (whisper decoder).
+
+    Fused block tail: ``residual`` rides the output projection's matmul
+    epilogue (``wo @ .. + residual`` in one pass), and ``tail_norm=True``
+    additionally fuses the *following* rms normalization's division into
+    the same pass (`norm(out_proj + residual)` on the VMEM-resident
+    output tile, RAPID divider included) — ``out`` then becomes the pair
+    ``(y, y_rms_div)`` where ``y`` is the residual stream and
+    ``y_rms_div`` the scale-free normalized value the next sublayer's
+    ``scale`` multiplies.
     """
     acfg = cfg.approx
     B, S, D = x.shape
@@ -344,7 +358,14 @@ def attention(x, params, cfg: ModelConfig, ctx: ParallelCtx, positions,
         out = _attn_blockwise(qg, k, v, positions, kv_positions, window,
                               is_causal, acfg, chunk)
     out = out.reshape(B, S, H * hd)
-    out = dense(out, params["wo"], acfg, "attn_proj")
+    if tail_norm:
+        ep = Epilogue(norm="rms", div_scheme=acfg.div("norm"),
+                      eps=cfg.norm_eps, keep_prenorm=True)
+        ydiv, y = dense(out, params["wo"], acfg, "attn_proj",
+                        residual=residual, epilogue=ep)
+        return (ctx.shard(y, "batch", "seq_act", "act_embed"),
+                ctx.shard(ydiv, "batch", "seq_act", "act_embed")), k, v
+    out = dense(out, params["wo"], acfg, "attn_proj", residual=residual)
     return ctx.shard(out, "batch", "seq_act", "act_embed"), k, v
 
 
@@ -427,13 +448,15 @@ def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     }
 
 
-def mlp(x, params, cfg: ModelConfig, ctx: ParallelCtx):
+def mlp(x, params, cfg: ModelConfig, ctx: ParallelCtx, residual=None):
     # the gate/up activation rides the matmul's fused epilogue (on the
-    # pallas backend it is applied to the VMEM-resident output tile)
+    # pallas backend it is applied to the VMEM-resident output tile);
+    # ``residual`` fuses the block's residual add into the down-
+    # projection's epilogue the same way — no extra HBM round-trip
     acfg = cfg.approx
     h = dense(x, params["w1"], acfg, "mlp", activation=cfg.act)
     h = ctx.shard(h, "batch", None, "ff")
     if cfg.act == "silu":
         h = h * dense(x, params["w3"], acfg, "mlp")
-    out = dense(h, params["w2"], acfg, "mlp")
+    out = dense(h, params["w2"], acfg, "mlp", residual=residual)
     return ctx.shard(out, "batch", "seq_act", "act_embed")

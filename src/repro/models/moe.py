@@ -57,7 +57,7 @@ def _expert_compute(buf, w1, w3, w2, acfg: Optional[ApproxConfig] = None):
     """
     sch = acfg.mul("mlp") if acfg is not None else None
     if sch:
-        bk = acfg.backend
+        bk = acfg.backend_for("mlp")
         g1 = qmatmul_batched(buf, w1.astype(buf.dtype), sch, backend=bk,
                              activation="silu")
         h3 = qmatmul_batched(buf, w3.astype(buf.dtype), sch, backend=bk)

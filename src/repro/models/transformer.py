@@ -44,32 +44,55 @@ def block_params(cfg: ModelConfig, moe_layer: bool = False,
     return p
 
 
-def _ffn(x, p, cfg, ctx, moe_layer):
+def _ffn(x, p, cfg, ctx, moe_layer, residual=None):
     if moe_layer:
-        return moe_mod.moe_ffn(x, p["ffn"], cfg, ctx)
-    return mlp(x, p["ffn"], cfg, ctx)
+        out = moe_mod.moe_ffn(x, p["ffn"], cfg, ctx)
+        return out if residual is None else residual + out
+    return mlp(x, p["ffn"], cfg, ctx, residual=residual)
 
 
 def block_apply(x, p, cfg: ModelConfig, ctx: ParallelCtx, positions,
                 moe_layer: bool = False, norm_kind: str = "rms",
                 enc_out=None, enc_positions=None, causal: bool = True,
                 return_kv: bool = False):
-    """Full-sequence block. Returns (x, kv) where kv=(k, v) if requested."""
+    """Full-sequence block. Returns (x, kv) where kv=(k, v) if requested.
+
+    The block tail is fused: the residual adds ride the attention-out /
+    MLP down-projection matmul epilogues, and — for rms-normed blocks
+    without a cross-attention slot in between — ln2's normalization
+    division is fused into the attention-out matmul's epilogue too
+    (``rms_div(wo_out + residual)`` with the RAPID divider on the
+    VMEM-resident output tile; only the cheap ``* scale`` stays outside).
+    """
     from repro.models.layers import attention
 
     x = ctx.shard(x, "batch", "seq_act", None)
+    # ln2's rms-div fuses into the attention-out matmul only when both
+    # sites route to the same backend — a per-site "norm" override must
+    # keep steering the normalization divide, not be silently absorbed
+    # into the attn_proj matmul's execution path
+    acfg = cfg.approx
+    fuse_ln2 = (norm_kind == "rms" and enc_out is None
+                and acfg.backend_for("norm") == acfg.backend_for("attn_proj"))
     h, k, v = attention(
         apply_norm(x, p["ln1"], cfg, norm_kind), p["attn"], cfg, ctx, positions,
-        causal=causal,
+        causal=causal, residual=x, tail_norm=fuse_ln2,
     )
-    x = x + h
-    if enc_out is not None:
-        hx, _, _ = attention(
-            apply_norm(x, p["lnx"], cfg, norm_kind), p["xattn"], cfg, ctx,
-            positions, kv_x=enc_out, kv_positions=enc_positions, causal=False,
-        )
-        x = x + hx
-    x = x + _ffn(apply_norm(x, p["ln2"], cfg, norm_kind), p, cfg, ctx, moe_layer)
+    if fuse_ln2:
+        y, ydiv = h
+        ffn_in = (ydiv.astype(jnp.float32)
+                  * p["ln2"]["scale"].astype(jnp.float32)).astype(y.dtype)
+    else:
+        y = h
+        if enc_out is not None:
+            hx, _, _ = attention(
+                apply_norm(y, p["lnx"], cfg, norm_kind), p["xattn"], cfg, ctx,
+                positions, kv_x=enc_out, kv_positions=enc_positions,
+                causal=False, residual=y,
+            )
+            y = hx
+        ffn_in = apply_norm(y, p["ln2"], cfg, norm_kind)
+    x = _ffn(ffn_in, p, cfg, ctx, moe_layer, residual=y)
     return (x, (k, v)) if return_kv else (x, None)
 
 
@@ -132,7 +155,9 @@ def block_decode(x, p, cache, slot_positions, pos, cfg: ModelConfig,
         q, ck, cv, slot_positions, pos, cfg.sliding_window, acfg, ctx,
         seq_shard_axis,
     )
-    x = x + dense(attn_out[:, None], p["attn"]["wo"], acfg, "attn_proj")[:, 0]
+    # the residual adds ride the projection epilogues (fused block tail)
+    x = dense(attn_out[:, None], p["attn"]["wo"], acfg, "attn_proj",
+              residual=x[:, None])[:, 0]
 
     if "ck" in cache:  # cross attention (enc-dec decode)
         hx = apply_norm(x[:, None], p["lnx"], cfg, norm_kind)
@@ -143,10 +168,11 @@ def block_decode(x, p, cache, slot_positions, pos, cfg: ModelConfig,
             jnp.broadcast_to(jnp.arange(Tc, dtype=jnp.int32), (B, Tc)),
             jnp.int32(2**30), 0, acfg, ctx, None,
         )
-        x = x + dense(xo[:, None], p["xattn"]["wo"], acfg, "attn_proj")[:, 0]
+        x = dense(xo[:, None], p["xattn"]["wo"], acfg, "attn_proj",
+                  residual=x[:, None])[:, 0]
 
     h2 = apply_norm(x[:, None], p["ln2"], cfg, norm_kind)
-    x = x + _ffn(h2, p, cfg, ctx, moe_layer)[:, 0]
+    x = _ffn(h2, p, cfg, ctx, moe_layer, residual=x[:, None])[:, 0]
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = ck, cv
     return x, new_cache

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import float_approx as fa
+from repro.core.ops import qdiv
 from repro.models.layers import ParallelCtx, dense
 from repro.models.params import P
 
@@ -34,9 +34,12 @@ _CHUNK = 64
 
 
 def _norm_div(num, den, acfg):
+    # registry-routed with the per-site "norm" backend override so an
+    # engine/trainstep-pinned backend reaches the xLSTM normalisers too
+    # (approx_div bypassed the registry and silently stayed on jnp)
     sch = acfg.div("norm")
     if sch:
-        return fa.approx_div(num, den, sch)
+        return qdiv(num, den, sch, backend=acfg.backend_for("norm"))
     return num / den
 
 

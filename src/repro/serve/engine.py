@@ -30,16 +30,16 @@ class ServeEngine:
     temperature: float = 0.0
     seed: int = 0
     # approximate-arithmetic backend (registry name); None defers to the
-    # model config / env / hardware autodetect.  Resolved once at engine
-    # build so prefill+decode compile against a concrete backend.
+    # model config's per-site map / env / hardware autodetect, an
+    # explicit name overrides every site.  Resolved once at engine build
+    # so prefill+decode compile against concrete per-site backends.
     backend: Optional[str] = None
 
     def __post_init__(self):
-        resolved = be.resolve_backend_name(
-            self.backend or self.model.cfg.approx.backend)
-        if resolved != self.model.cfg.approx.backend:
-            self.model = Model(self.model.cfg.with_backend(resolved))
-        self.backend = resolved
+        pinned = be.pin_backends(self.model.cfg.approx, self.backend)
+        if pinned != self.model.cfg.approx:
+            self.model = Model(self.model.cfg.with_(approx=pinned))
+        self.backend = pinned.backend_for("default")
         self._decode = jax.jit(
             lambda p, t, c: self.model.decode_step(p, t, c, self.ctx))
         self._prefill = jax.jit(

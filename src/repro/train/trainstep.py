@@ -29,17 +29,17 @@ __all__ = ["make_train_step", "make_eval_step"]
 
 
 def _pin_backend(model: Model, backend: Optional[str]) -> Model:
-    """Resolve the registry backend once at step-build time.
+    """Resolve every site's registry backend once at step-build time.
 
     Pinning here (instead of per-trace inside jit) means env-var changes
     after the step is built cannot silently flip the compiled kernel
-    choice between microbatches or across recompiles.
+    choice between microbatches or across recompiles; an explicit
+    ``backend`` name overrides every per-site entry.
     """
-    resolved = be.resolve_backend_name(
-        backend or model.cfg.approx.backend)
-    if resolved == model.cfg.approx.backend:
+    pinned = be.pin_backends(model.cfg.approx, backend)
+    if pinned == model.cfg.approx:
         return model
-    return Model(model.cfg.with_backend(resolved))
+    return Model(model.cfg.with_(approx=pinned))
 
 
 def _cast_tree(tree, dtype):

@@ -369,15 +369,224 @@ def test_pinned_backend_reaches_every_divide_site(monkeypatch):
 
     # pinned jnp + env pointing elsewhere -> the pin must win everywhere
     monkeypatch.setenv(be.ENV_VAR, "pallas-interpret")
-    pinned_jnp = ApproxConfig(div_scheme="rapid9", backend="jnp")
+    pinned_jnp = ApproxConfig(div_scheme="rapid9", backends="jnp")
     for jaxpr in traces(pinned_jnp):
         assert not _jaxpr_has_pallas(jaxpr), jaxpr
 
     # pinned pallas-interpret + env unset -> every site traces the kernel
     monkeypatch.delenv(be.ENV_VAR, raising=False)
-    pinned_pal = ApproxConfig(div_scheme="rapid9", backend="pallas-interpret")
+    pinned_pal = ApproxConfig(div_scheme="rapid9", backends="pallas-interpret")
     for jaxpr in traces(pinned_pal):
         assert _jaxpr_has_pallas(jaxpr), jaxpr
+
+
+def test_per_site_backend_overrides(monkeypatch):
+    """One config can mix backends per site: pallas-interpret MLP
+    matmuls with jnp logits in the same model."""
+    from repro.configs.base import ApproxConfig
+    from repro.models import layers
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    acfg = ApproxConfig(
+        mul_scheme="rapid10", on_logits=True,
+        backends={"mlp": "pallas-interpret", "logits": "jnp",
+                  "default": "jnp"})
+    x = jnp.ones((2, 32), jnp.float32)
+    w = jnp.ones((32, 16), jnp.float32)
+    mlp_jaxpr = jax.make_jaxpr(
+        lambda x: layers.dense(x, w, acfg, "mlp"))(x)
+    logits_jaxpr = jax.make_jaxpr(
+        lambda x: layers.dense(x, w, acfg, "logits"))(x)
+    assert _jaxpr_has_pallas(mlp_jaxpr)
+    assert not _jaxpr_has_pallas(logits_jaxpr)
+    # sites without their own entry defer to "default"
+    attn_jaxpr = jax.make_jaxpr(
+        lambda x: layers.dense(x, w, acfg, "attn_proj"))(x)
+    assert not _jaxpr_has_pallas(attn_jaxpr)
+
+
+def test_backend_alias_and_site_map():
+    """`backend`/`matmul_backend` stay as read-only aliases for the
+    default entry; with_backends merges; unknown sites raise."""
+    from repro.configs.base import ApproxConfig
+
+    acfg = ApproxConfig(backends="jnp")
+    assert acfg.backend == "jnp" and acfg.matmul_backend == "jnp"
+    assert acfg.backend_for("mlp") == "jnp"  # defers to default
+    merged = acfg.with_backends({"mlp": "pallas-interpret"})
+    assert merged.backend_for("mlp") == "pallas-interpret"
+    assert merged.backend_for("norm") == "jnp"  # default preserved
+    assert merged.backend == "jnp"
+    # an explicit per-site "auto" defers to the default entry, exactly
+    # like an absent entry (it must NOT leapfrog straight to env/hw)
+    explicit_auto = ApproxConfig(backends={"mlp": "auto", "default": "jnp"})
+    assert explicit_auto.backend_for("mlp") == "jnp"
+    reset = merged.with_backends("pallas-interpret")
+    assert reset.backend_for("mlp") == "pallas-interpret"
+    assert reset.backend_for("logits") == "pallas-interpret"
+    with pytest.raises(AttributeError):  # FrozenInstanceError
+        acfg.backend = "pallas"  # read-only alias
+    with pytest.raises(KeyError):
+        ApproxConfig(backends={"not_a_site": "jnp"})
+    with pytest.raises(KeyError):
+        acfg.backend_for("not_a_site")
+
+
+def test_pin_backends_resolves_every_site(monkeypatch):
+    """pin_backends collapses auto at every site through the selection
+    function once; an explicit override wins everywhere."""
+    from repro.configs.base import BACKEND_SITES, ApproxConfig
+
+    monkeypatch.setenv(be.ENV_VAR, "pallas-interpret")
+    pinned = be.pin_backends(ApproxConfig(backends={"mlp": "jnp"}))
+    assert pinned.backend_for("mlp") == "jnp"       # explicit site kept
+    for site in ("default",) + tuple(s for s in BACKEND_SITES if s != "mlp"):
+        assert pinned.backend_for(site) == "pallas-interpret"  # env won
+    forced = be.pin_backends(ApproxConfig(backends={"mlp": "jnp"}), "jnp")
+    for site in ("default",) + BACKEND_SITES:
+        assert forced.backend_for(site) == "jnp"
+
+
+def test_model_with_site_backends_reaches_call_sites(monkeypatch):
+    """ModelConfig.with_site_backends threads the map into the layers:
+    the MLP traces the kernel while the norm divide stays on jnp."""
+    from repro.configs.base import ApproxConfig, get_config
+    from repro.models import layers
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    cfg = get_config("yi_6b").reduced().with_(
+        approx=ApproxConfig(mul_scheme="rapid10", div_scheme="rapid9")
+    ).with_site_backends({"mlp": "pallas-interpret", "default": "jnp"})
+    ctx = layers.ParallelCtx()
+    p = {"w1": jnp.ones((cfg.d_model, cfg.d_ff), jnp.float32),
+         "w3": jnp.ones((cfg.d_model, cfg.d_ff), jnp.float32),
+         "w2": jnp.ones((cfg.d_ff, cfg.d_model), jnp.float32)}
+    x = jnp.ones((2, 4, cfg.d_model), jnp.float32)
+    mlp_jaxpr = jax.make_jaxpr(lambda x: layers.mlp(x, p, cfg, ctx))(x)
+    assert _jaxpr_has_pallas(mlp_jaxpr)
+    norm_p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    norm_jaxpr = jax.make_jaxpr(
+        lambda x: layers.rms_norm(x, norm_p, 1e-6, cfg.approx))(
+            jnp.ones((2, cfg.d_model), jnp.float32))
+    assert not _jaxpr_has_pallas(norm_jaxpr)
+
+
+# --------------------------------------------------------------------------
+# epilogue menu: validation + straight-through gradients
+# --------------------------------------------------------------------------
+
+def test_epilogue_validation(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(8, 2, 3)), jnp.float32)
+    with pytest.raises(ValueError):  # activation both ways is ambiguous
+        qmatmul(x, w, "rapid10", activation="silu",
+                epilogue=be.Epilogue(activation="relu"))
+    with pytest.raises(ValueError):  # norm epilogues need a 2-D weight
+        qmatmul(x, w3, "rapid10", epilogue=be.Epilogue(norm="rms"))
+    with pytest.raises(ValueError):  # residual must match the output
+        qmatmul(x, w, "rapid10",
+                residual=jnp.zeros((4, 5), jnp.float32))
+    with pytest.raises(ValueError):  # keep_prenorm needs a norm stage
+        qmatmul(x, w, "rapid10", epilogue=be.Epilogue(keep_prenorm=True))
+    with pytest.raises(KeyError):
+        qmatmul(x, w, "rapid10", epilogue=be.Epilogue(norm="nope"))
+
+
+def test_fused_tail_grads_match_exact_composition(rng):
+    """The full block tail norm(act(x @ w + b) + r) carries straight-
+    through gradients equal to the exact composition's, for both norm
+    stages and for the pair output."""
+    x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+
+    def exact_tail(x, w, b, r, norm):
+        z = jax.nn.silu(x @ w + b[None, :]) + r
+        if norm == "rms":
+            return z / jnp.sqrt(jnp.mean(jnp.square(z), -1, keepdims=True)
+                                + 1e-6)
+        return z / jnp.maximum(jnp.sum(z, -1, keepdims=True), 1e-20)
+
+    for norm in ("rms", "softmax"):
+        ep = be.Epilogue(activation="silu", norm=norm, div_scheme="rapid9")
+        ga = jax.grad(lambda *a: qmatmul(
+            a[0], a[1], "rapid10", backend="jnp", bias=a[2], residual=a[3],
+            epilogue=ep).sum(), argnums=(0, 1, 2, 3))(x, w, b, r)
+        ge = jax.grad(lambda *a: exact_tail(*a, norm).sum(),
+                      argnums=(0, 1, 2, 3))(x, w, b, r)
+        for a, e in zip(ga, ge):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                       rtol=2e-5, atol=2e-5)
+
+    # pair output: the pre-norm cotangent flows through both outputs
+    ep = be.Epilogue(activation="silu", norm="rms", div_scheme="rapid9",
+                     keep_prenorm=True)
+
+    def loss_pair(x, w, b, r):
+        tail, pre = qmatmul(x, w, "rapid10", backend="jnp", bias=b,
+                            residual=r, epilogue=ep)
+        return (tail * 2.0).sum() + pre.sum()
+
+    def loss_pair_exact(x, w, b, r):
+        pre = jax.nn.silu(x @ w + b[None, :]) + r
+        tail = pre / jnp.sqrt(jnp.mean(jnp.square(pre), -1, keepdims=True)
+                              + 1e-6)
+        return (tail * 2.0).sum() + pre.sum()
+
+    ga = jax.grad(loss_pair, argnums=(0, 1, 2, 3))(x, w, b, r)
+    ge = jax.grad(loss_pair_exact, argnums=(0, 1, 2, 3))(x, w, b, r)
+    for a, e in zip(ga, ge):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_ln2_fusion_respects_norm_site_override(monkeypatch):
+    """A per-site "norm" backend override must keep steering ln2's
+    divide: block_apply skips the attention-out tail fusion when the
+    norm and attn_proj sites route to different backends."""
+    from repro.configs.base import ApproxConfig, get_config
+    from repro.models.layers import ParallelCtx
+    from repro.models.transformer import block_params, block_apply
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    cfg = get_config("yi_6b").reduced().with_(
+        approx=ApproxConfig(mul_scheme="rapid10", div_scheme="rapid9"))
+    ctx = ParallelCtx()
+    from repro.models.params import materialize
+    p = materialize(block_params(cfg), jax.random.PRNGKey(0), "float32")
+    x = jnp.ones((1, 4, cfg.d_model), jnp.float32)
+    pos = jnp.arange(4)
+
+    def n_pallas_calls(c):
+        jaxpr = jax.make_jaxpr(lambda x: block_apply(
+            x, p, c, ctx, pos)[0])(x)
+        return str(jaxpr).count("pallas_call")
+
+    # same backend at both sites: the fused tail traces the kernel for
+    # the ln2 divide too; split sites: norm stays on jnp (fewer calls)
+    fused = n_pallas_calls(cfg.with_backend("pallas-interpret"))
+    split = n_pallas_calls(cfg.with_backend("pallas-interpret")
+                           .with_site_backends({"norm": "jnp"}))
+    assert fused > 0
+    assert split < fused
+
+
+def test_exact_path_carries_rapid_norm_tail(rng):
+    """scheme=None (exact MXU matmul) still routes a div_scheme norm
+    epilogue through the registry divider ops."""
+    x = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    ep = be.Epilogue(norm="rms", div_scheme="rapid9")
+    got = qmatmul(x, w, None, backend="jnp", epilogue=ep)
+    want = qrms_div(x @ w, 1e-6, "rapid9", backend="jnp")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the pair output returns the plain product as the pre value
+    tail, pre = qmatmul(x, w, None, backend="jnp", epilogue=be.Epilogue(
+        norm="rms", div_scheme="rapid9", keep_prenorm=True))
+    np.testing.assert_array_equal(np.asarray(pre), np.asarray(x @ w))
+    np.testing.assert_array_equal(np.asarray(tail), np.asarray(want))
 
 
 def test_parallel_ctx_axes_rejects_unknown_logical_names():

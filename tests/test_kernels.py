@@ -73,6 +73,44 @@ def test_log_matmul_kernel_vs_oracle(shape, scheme, rng):
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("shape", [
+    (1, 1, 1),      # everything below one tile
+    (3, 5, 2),      # sub-tile M/N/K together
+    (5, 130, 7),    # K in (128, 512) and NOT a multiple of the unroll:
+                    # the old _pick_blocks kept bk=130, truncated
+                    # bk // unroll and silently dropped the K tail
+    (24, 136, 12),  # K % 8 == 0 but unaligned to lanes
+    (300, 200, 9),  # M above one block with sub-tile N
+])
+def test_log_matmul_degenerate_shapes_bitexact(shape, rng):
+    """Degenerate (smaller-than-tile / unaligned) shapes must clamp the
+    block sizes up to hardware minimums and still agree bit-for-bit with
+    the chunk=1 jnp scan (single K block after padding)."""
+    from repro.core.ops import qmatmul
+
+    m, k, n = shape
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = log_matmul(x, w, "rapid10", interpret=True)
+    want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
+
+
+def test_pick_blocks_hardware_aligned():
+    """Blocks are multiples of the f32 tile (8 sublanes / 128 lanes) and
+    bk stays a multiple of the unroll factor for every K."""
+    from repro.kernels.log_matmul.ops import _pick_blocks
+
+    for m, n, k in [(1, 1, 1), (5, 7, 130), (300, 9, 136), (999, 999, 999)]:
+        bm, bn, bk = _pick_blocks(m, n, k)
+        assert bm % 8 == 0 and 8 <= bm <= 256
+        assert bn % 128 == 0 and 128 <= bn <= 256
+        assert bk % 128 == 0 and 128 <= bk <= 512
+        assert bk % 8 == 0
+
+
 def test_log_matmul_error_bound(rng):
     """Dot-product error stays within the per-element PRE (cancellation
     makes it far smaller — the paper's near-zero-bias aggregation claim)."""

@@ -1,0 +1,130 @@
+"""Backend-parity CI sweep (ROADMAP item): scheme x activation x
+epilogue x shape bit-exactness between the jnp oracle and the Pallas
+kernels under the interpreter.
+
+This is the gate for kernel rewrites: every epilogue-menu composition
+(bias / activation / residual-add / rms-normalize / softmax-combine)
+must agree bit-for-bit across the grid.  The oracle side runs *jitted*
+— models always execute compiled, and compositions where a mul-tailed
+activation (silu/gelu) feeds the residual add are algebraically
+rewritten by XLA inside a compiled module (see
+``backend.apply_epilogue_tile``'s compilation-context note), so
+compiled-vs-compiled is the parity that actually ships.
+
+Run via the dedicated CI job: ``pytest -m parity``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as be
+from repro.core.ops import qmatmul
+
+pytestmark = pytest.mark.parity
+
+# mul scheme -> div scheme used by its norm epilogues (the pairing the
+# launcher ships: rapid10 multipliers with the rapid9 divider, etc.)
+SCHEMES = {
+    "mitchell": "mitchell",
+    "rapid3": "rapid3",
+    "rapid5": "rapid5",
+    "rapid10": "rapid9",
+}
+
+# (M, K, N): single-K-block shapes (K <= 512 after padding) so the jnp
+# scan at chunk=1 accumulates in the kernel's slab order; N spans
+# lane-aligned, heavily-padded and multi-lane widths.
+SHAPES = [
+    (5, 40, 24),
+    (16, 96, 128),
+    (9, 200, 130),
+]
+
+# the epilogue menu: every stage alone plus full block tails
+EPILOGUES = {
+    "bias": dict(bias=True),
+    "bias_act": dict(bias=True, ep=be.Epilogue(activation="silu")),
+    "residual": dict(residual=True),
+    "act_residual": dict(bias=True, residual=True,
+                         ep=be.Epilogue(activation="relu")),
+    "rms": dict(ep=be.Epilogue(norm="rms")),
+    "softmax": dict(ep=be.Epilogue(norm="softmax")),
+    "full_tail_rms": dict(bias=True, residual=True,
+                          ep=be.Epilogue(activation="silu", norm="rms",
+                                         keep_prenorm=True)),
+    "full_tail_softmax": dict(bias=True, residual=True,
+                              ep=be.Epilogue(activation="relu",
+                                             norm="softmax")),
+}
+
+
+def _operands(shape, rng):
+    m, k, n = shape
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    return x, w, b, r
+
+
+def _with_div_scheme(ep, div_scheme):
+    if ep is None or ep.norm is None:
+        return ep
+    import dataclasses
+
+    return dataclasses.replace(ep, div_scheme=div_scheme)
+
+
+def _assert_bitexact(a, b):
+    tree_a = a if isinstance(a, tuple) else (a,)
+    tree_b = b if isinstance(b, tuple) else (b,)
+    for ga, gb in zip(tree_a, tree_b):
+        np.testing.assert_array_equal(
+            np.asarray(ga).view(np.int32), np.asarray(gb).view(np.int32))
+
+
+def _run_pair(shape, scheme, spec, div_scheme, rng):
+    x, w, b, r = _operands(shape, rng)
+    ep = _with_div_scheme(spec.get("ep"), div_scheme)
+    kw = dict(
+        bias=b if spec.get("bias") else None,
+        residual=r if spec.get("residual") else None,
+        epilogue=ep,
+    )
+    oracle = jax.jit(functools.partial(
+        qmatmul, scheme=scheme, chunk=1, backend="jnp", **kw))
+    got_jnp = oracle(x, w)
+    got_pal = qmatmul(x, w, scheme, backend="pallas-interpret", **kw)
+    _assert_bitexact(got_jnp, got_pal)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("name", sorted(EPILOGUES))
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_epilogue_menu_bitexact(scheme, name, shape, rng):
+    """Every fused epilogue composition is bit-exact between the jnp
+    oracle (chunk=1, jitted) and the fused kernel under the interpreter
+    across the scheme x shape grid."""
+    _run_pair(shape, scheme, EPILOGUES[name], SCHEMES[scheme], rng)
+
+
+@pytest.mark.parametrize("activation",
+                         [None, "relu", "silu", "gelu", "gelu_erf", "tanh"])
+@pytest.mark.parametrize("shape", SHAPES[:2],
+                         ids=lambda s: "x".join(map(str, s)))
+def test_activation_sweep_full_tail_bitexact(activation, shape, rng):
+    """Activation axis of the sweep: every registered activation inside
+    the full block tail norm(act(x @ w + b) + residual), pair output."""
+    spec = dict(bias=True, residual=True,
+                ep=be.Epilogue(activation=activation, norm="rms",
+                               keep_prenorm=True))
+    _run_pair(shape, "rapid10", spec, "rapid9", rng)
+
+
+def test_parity_marker_registered(pytestconfig):
+    """The sweep must stay selectable as its own CI job (`-m parity`)."""
+    markers = pytestconfig.getini("markers")
+    assert any(str(m).startswith("parity") for m in markers)
