@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import RAPID, get_config
 from repro.data.pipeline import SyntheticLM

@@ -12,16 +12,62 @@ everything.  ``--smoke`` runs every module at tiny shapes / one rep so
 CI can prove the whole harness still executes (a bit-rot gate, not a
 measurement); any sub-benchmark that raises is reported with its
 traceback and the process exits non-zero.
+
+Regression gate: ``--json PATH`` writes a machine-readable result file
+(per-benchmark status + wall seconds); ``--baseline PATH`` diffs the
+run against a committed reference (``BENCH_baseline.json`` at the repo
+root) and fails when a benchmark present in the baseline is missing,
+failed, or slower than ``--tolerance`` x its baseline wall time.  The
+tolerance is deliberately generous — CI runners are noisy; the gate is
+for order-of-magnitude rot (an accidentally-quadratic path, an
+interpreter fallback), not microbenchmarking.  Sub-second baselines are
+compared against ``tolerance * max(wall, MIN_GATED_WALL_S)`` so timer
+jitter on trivial modules cannot fail a PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
 ALL = ["table3_accuracy", "table3_throughput", "fused_div", "apps_qor",
        "e2e_train", "roofline_report"]
+
+#: Below this baseline wall time, the time gate compares against
+#: tolerance * MIN_GATED_WALL_S instead (pure-jitter regime).
+MIN_GATED_WALL_S = 2.0
+
+
+def compare_to_baseline(results: dict, baseline: dict,
+                        tolerance: float) -> list:
+    """Diff a run's results against a baseline; return regression strings.
+
+    ``results`` / ``baseline`` are ``{name: {"status", "wall_s"}}``.
+    Regressions: a baseline benchmark that is missing or failed in this
+    run, or whose wall time exceeds
+    ``tolerance * max(baseline_wall, MIN_GATED_WALL_S)``.  Benchmarks
+    new in this run (absent from the baseline) are not gated.
+    """
+    problems = []
+    for name, base in baseline.items():
+        got = results.get(name)
+        if got is None:
+            problems.append(f"{name}: present in baseline but did not run")
+            continue
+        if got.get("status") != "ok":
+            problems.append(f"{name}: status {got.get('status')!r} "
+                            "(baseline: ok)")
+            continue
+        budget = tolerance * max(float(base.get("wall_s", 0.0)),
+                                 MIN_GATED_WALL_S)
+        if float(got.get("wall_s", 0.0)) > budget:
+            problems.append(
+                f"{name}: wall {got['wall_s']:.1f}s exceeds "
+                f"{budget:.1f}s (baseline {base.get('wall_s', 0):.1f}s "
+                f"x tolerance {tolerance})")
+    return problems
 
 
 def main(argv=None) -> int:
@@ -30,27 +76,62 @@ def main(argv=None) -> int:
                     help=f"benchmarks to run (default: all of {ALL})")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, one rep: CI bit-rot gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-benchmark status + wall seconds as JSON")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="diff against a baseline JSON (BENCH_baseline.json) "
+                         "and fail on regressions")
+    ap.add_argument("--tolerance", type=float, default=4.0,
+                    help="allowed wall-time ratio vs baseline (default 4.0; "
+                         "generous on purpose — CI runners are noisy)")
     args = ap.parse_args(argv)
     unknown = [n for n in args.names if n not in ALL]
     if unknown:
         ap.error(f"unknown benchmarks {unknown}; have {ALL}")
     names = args.names or ALL
     failures = []
+    results = {}
     for name in names:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main(smoke=args.smoke)
-            print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+            wall = time.time() - t0
+            results[name] = {"status": "ok", "wall_s": round(wall, 2)}
+            print(f"===== {name} done in {wall:.1f}s =====")
         except Exception as e:  # keep the harness going, fail at exit
             failures.append(name)
+            results[name] = {"status": "failed",
+                             "wall_s": round(time.time() - t0, 2),
+                             "error": f"{type(e).__name__}: {e}"}
             traceback.print_exc()
             print(f"===== {name} FAILED: {type(e).__name__}: {e} =====")
+
+    if args.json:
+        payload = {"smoke": bool(args.smoke), "benchmarks": results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote {args.json}")
+
+    rc = 0
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
-        return 1
-    return 0
+        rc = 1
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f).get("benchmarks", {})
+        problems = compare_to_baseline(results, baseline, args.tolerance)
+        if problems:
+            print("\nBENCHMARK REGRESSIONS vs baseline:")
+            for p in problems:
+                print(f"  - {p}")
+            rc = 1
+        else:
+            print(f"\nbenchmark gate OK vs {args.baseline} "
+                  f"(tolerance {args.tolerance}x)")
+    return rc
 
 
 if __name__ == "__main__":

@@ -1,6 +1,21 @@
 """Quickstart: RAPID approximate arithmetic in 30 lines.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+CI (.github/workflows/ci.yml) gates every PR — badge:
+https://github.com/<org>/<repo>/actions/workflows/ci.yml/badge.svg
+
+  job          what it proves
+  -----------  ------------------------------------------------------
+  lint         ruff correctness rules (ruff.toml) + compileall
+  tier1        full suite on jax 0.4.37 *and* 0.8.0 (compat shim
+               exercised both ways)
+  parity       jnp oracle vs pallas-interpret bit-exactness sweep
+  multidevice  EP/TP shard_map tests on 8 fake XLA devices, both jax
+               pins — the kernels really run on local shards
+  bench-gate   benchmarks.run --smoke + regression diff against the
+               committed BENCH_baseline.json (JSON uploaded as a PR
+               artifact)
 """
 import jax
 import jax.numpy as jnp
@@ -61,3 +76,32 @@ tail, res_stream = qmatmul(
                       keep_prenorm=True),  # also emit the pre-norm value
 )
 print("fused block tail:", tail.shape, "residual stream:", res_stream.shape)
+
+# --- running sharded with the pallas backend ----------------------------
+# The pallas kernels are *per-device*, so on a multi-device process the
+# hardware autodetect answers per call site: pjit-visible (global-view)
+# matmuls resolve to the partitionable "jnp" formulation, while code
+# traced inside a `repro.compat.shard_map` body — the EP/TP expert
+# compute in models/moe.py, the flash-decode combine — sees per-shard
+# shapes and legally runs the kernels on each local shard.  Engines and
+# train steps pin per-site backends at build (core.backend.pin_backends);
+# on a multi-device TPU an auto site pins as the AUTO_HW sentinel, which
+# re-resolves only from the memoized hardware probe + the trace context,
+# so the same pinned config routes jnp under pjit and pallas under
+# shard_map, and post-build env changes can't flip compiled kernels.
+#
+#   from repro.parallel.sharding import make_rules
+#   mesh = jax.make_mesh((2, 4), ("data", "model"))   # EP over "model"
+#   ctx = ParallelCtx(mesh, make_rules(cfg))
+#   out = jax.jit(lambda x, p: moe_ffn(x, p, cfg, ctx))(x, params)
+#
+# Locality is detected from the axis environment (works on jax 0.4.x and
+# 0.8+); shard_map bodies must run under jit — the eager shard_map
+# interpreter has no pallas rule.  CI's `multidevice` job forces an
+# 8-device CPU host (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# and checks the sharded EP/TP forward bit-exact against the
+# single-device oracle (tests/test_shardmap_parity.py).
+from repro import compat
+
+print("\nin shard_map?", compat.in_shard_map(),
+      "| axis env:", compat.axis_env_sizes())

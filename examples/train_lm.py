@@ -7,7 +7,6 @@ Run: PYTHONPATH=src python examples/train_lm.py [--steps 200] [--approx]
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import RAPID, get_config
 from repro.data.pipeline import SyntheticLM

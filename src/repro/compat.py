@@ -1,28 +1,53 @@
 """Version-compatibility layer over the jax API surface this repo uses.
 
 The repo targets the jax 0.4.x series that ships in the hermetic image
-*and* the current 0.8+ API, which moved/renamed two things we depend on:
+*and* the current 0.8+ API, which moved/renamed the things we depend on:
 
   * ``shard_map`` — lives at ``jax.experimental.shard_map.shard_map`` on
     0.4.x and was promoted to ``jax.shard_map`` on 0.8+;
   * the replication-check kwarg — called ``check_rep`` on 0.4.x and
-    renamed to ``check_vma`` on 0.8+.
+    renamed to ``check_vma`` on 0.8+;
+  * the **named-axis environment** — the trace-time record of which mesh
+    axes the current code is manually mapped over (i.e. "am I inside a
+    shard_map body, and what are my local axis sizes").  Old 0.4.x
+    keeps a stack of ``AxisEnvFrame``s on
+    ``jax.core.thread_local_state.trace_state.axis_env``; 0.4.36+ and
+    0.8+ expose a single ``get_axis_env()`` returning an ``AxisEnv``
+    with an ``axis_sizes`` mapping.
 
 Everything that shard-maps goes through :func:`shard_map` below, which
 accepts the *new* spelling (``check_vma=``) and translates to whatever
 the installed jax understands.  The adapter is resolved once per process
 and cached; :func:`adapt_shard_map` is the pure, cache-free core so tests
 can exercise both signatures with monkeypatched implementations.
+
+Manual-mesh helpers: :func:`axis_env_sizes` / :func:`in_shard_map` /
+:func:`manual_axis_size` answer the locality question the backend
+registry needs — a Pallas kernel is per-device, so it is only legal on a
+multi-device process when the call site is already device-local (traced
+inside a shard_map body).  :func:`axis_env_reader_for` is the pure,
+cache-free core over a module-like surface, so tests can exercise the
+legacy-frames and modern-AxisEnv shapes against the same expectations.
 """
 from __future__ import annotations
 
 import functools
 import inspect
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 
-__all__ = ["shard_map", "adapt_shard_map", "resolve_shard_map"]
+__all__ = [
+    "shard_map",
+    "adapt_shard_map",
+    "resolve_shard_map",
+    "axis_sizes_from_env",
+    "axis_sizes_from_frames",
+    "axis_env_reader_for",
+    "axis_env_sizes",
+    "in_shard_map",
+    "manual_axis_size",
+]
 
 
 def resolve_shard_map() -> Callable:
@@ -77,3 +102,108 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=check_vma,
     )
+
+
+# --------------------------------------------------------------------------
+# manual-mesh awareness: the named-axis environment, both API generations
+# --------------------------------------------------------------------------
+
+def axis_sizes_from_env(env) -> Dict[str, int]:
+    """Pure: modern ``AxisEnv`` (0.4.36+/0.8+) -> ``{axis_name: size}``.
+
+    The modern object carries an ``axis_sizes`` mapping; anything without
+    one (or ``None``) reads as "no axes bound".
+    """
+    sizes = getattr(env, "axis_sizes", None)
+    if not sizes:
+        return {}
+    return {name: int(size) for name, size in dict(sizes).items()
+            if isinstance(name, str)}
+
+
+def axis_sizes_from_frames(frames) -> Dict[str, int]:
+    """Pure: legacy ``AxisEnvFrame`` stack (jax <= 0.4.35) -> sizes.
+
+    Frames whose name is not a plain string (e.g. the ``no_axis_name``
+    sentinel an unnamed vmap pushes) are skipped — only user-named mesh
+    axes count as manual-region evidence.
+    """
+    out: Dict[str, int] = {}
+    for frame in frames or ():
+        name = getattr(frame, "name", None)
+        size = getattr(frame, "size", None)
+        if isinstance(name, str) and size is not None:
+            out[name] = int(size)
+    return out
+
+
+def axis_env_reader_for(core) -> Callable[[], Dict[str, int]]:
+    """Build an axis-size reader over a ``jax.core``-like surface.
+
+    ``core`` exposes either the modern ``get_axis_env()`` (an ``AxisEnv``
+    with ``axis_sizes``) or the legacy
+    ``thread_local_state.trace_state.axis_env`` frame stack; the returned
+    zero-arg callable yields ``{axis_name: size}`` either way.  Pure and
+    cache-free so tests can feed both API shapes through one contract.
+    """
+    get_env = getattr(core, "get_axis_env", None)
+    if get_env is not None:
+        return lambda: axis_sizes_from_env(get_env())
+    tls = getattr(core, "thread_local_state", None)
+    if tls is not None:
+        return lambda: axis_sizes_from_frames(tls.trace_state.axis_env)
+    return dict  # no axis-env surface at all: never inside a manual region
+
+
+def _installed_axis_env_reader() -> Callable[[], Dict[str, int]]:
+    """Locate the installed jax's axis environment (public surface first,
+    then the 0.4.36+/0.8 private home of ``get_axis_env``).
+
+    Resolved per call — the lookup is two ``getattr``s and happens at
+    trace time (not per element), and late binding keeps monkeypatched
+    ``jax.core`` surfaces in tests honest.
+    """
+    core = jax.core
+    if (getattr(core, "get_axis_env", None) is not None
+            or getattr(core, "thread_local_state", None) is not None):
+        return axis_env_reader_for(core)
+    try:
+        from jax._src import core as src_core
+    except ImportError:  # pragma: no cover - unknown future jax
+        return dict
+    return axis_env_reader_for(src_core)
+
+
+def axis_env_sizes() -> Dict[str, int]:
+    """Named mesh axes bound at the current trace point -> their sizes.
+
+    Empty outside any manually-mapped region; inside a ``shard_map``
+    body it maps every mesh axis name to its mesh size (a 1-sized axis
+    still counts — the body is device-local either way).
+    """
+    return _installed_axis_env_reader()()
+
+
+def in_shard_map() -> bool:
+    """Whether the current trace point is inside a manually-mapped
+    (device-local) region — a ``shard_map`` body on every supported jax
+    (``pmap`` and axis-named ``vmap`` also register; the repo uses
+    neither).
+    """
+    return bool(axis_env_sizes())
+
+
+def manual_axis_size(*names: str) -> int:
+    """Product of the named bound axes' sizes (the local shard count
+    over those axes).  Unbound names raise — asking for an axis outside
+    its shard_map is a bug, not a 1.
+    """
+    sizes = axis_env_sizes()
+    total = 1
+    for name in names:
+        if name not in sizes:
+            raise KeyError(
+                f"axis {name!r} is not bound at this trace point; "
+                f"bound axes: {sorted(sizes)}")
+        total *= sizes[name]
+    return total

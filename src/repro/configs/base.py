@@ -80,7 +80,11 @@ class ApproxConfig:
     # Per-site entries let one model mix execution paths — e.g. pallas
     # fused-tail MLPs with partitioner-visible jnp logits.  A config
     # pinned at engine/trainstep build (ModelConfig.with_backend /
-    # core.backend.pin_backends) therefore reaches every site.
+    # core.backend.pin_backends) therefore reaches every site; on a
+    # multi-device TPU a pinned auto site holds backend.AUTO_HW — the
+    # deliberately context-dependent entry that resolves to jnp from
+    # the global (pjit) view but to the pallas kernels inside shard_map
+    # bodies, where the call is already device-local.
     backends: object = "auto"
 
     def __post_init__(self):

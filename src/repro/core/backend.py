@@ -44,6 +44,19 @@ default (``set_default_backend``) > hardware autodetect (``pallas`` on
 TPU, ``jnp`` elsewhere).  ``None``/"auto" at a call site means "defer to
 the next level down".
 
+Manual-mesh awareness: the Pallas kernels are per-device, so on a
+multi-device process the hardware level answers differently depending on
+*where* the call is traced — ``jnp`` from the global (pjit/GSPMD) view,
+but ``pallas`` inside a ``shard_map`` body, where shapes are already
+per-shard and the kernel is legal (``repro.compat.in_shard_map``).
+Because that answer depends on trace context, :func:`pin_backends`
+collapses the arg/env/process-default levels eagerly but pins the
+hardware level as the :data:`AUTO_HW` sentinel exactly when it is
+context-dependent (multi-device TPU); ``AUTO_HW`` re-consults only the
+memoized hardware probe + the axis-env at dispatch time, never the env
+var, so a pinned config still cannot be flipped by post-build env
+changes.
+
 Per-site overrides: model code never picks a literal backend — it asks
 ``ApproxConfig.backend_for(site)`` (sites: ``mlp`` / ``attn_proj`` /
 ``logits`` / ``norm`` / ``softmax``), each of which resolves through the
@@ -62,12 +75,14 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import float_approx as fa
 from repro.kernels.fused_div import ref as fdref
 
 __all__ = [
     "Backend",
     "ENV_VAR",
+    "AUTO_HW",
     "ACTIVATIONS",
     "SOFTMAX_FLOOR",
     "Epilogue",
@@ -79,7 +94,10 @@ __all__ = [
     "get_backend",
     "available_backends",
     "resolve_backend_name",
+    "resolve_site_device_local",
+    "pin_backend_name",
     "set_default_backend",
+    "invalidate_device_probe",
     "pin_backends",
     "matmul",
     "div",
@@ -88,6 +106,14 @@ __all__ = [
 ]
 
 ENV_VAR = "RAPID_BACKEND"
+
+#: Pinned-but-context-dependent hardware selection: "resolve from the
+#: memoized device probe + the trace context (in/out of shard_map) at
+#: dispatch time".  pin_backends emits this exactly when the hardware
+#: answer differs between the global and the device-local view
+#: (multi-device TPU); unlike "auto" it never re-reads the env var or
+#: the process default.
+AUTO_HW = "auto-hw"
 
 # Default softmax-combine denominator floor (re-exported from the fused
 # kernels' canonical-semantics module).
@@ -430,37 +456,120 @@ def set_default_backend(name: Optional[str]) -> None:
     _DEFAULT = name
 
 
-def _autodetect() -> str:
-    """Hardware default: pallas only on a *single-device* TPU process.
+@functools.lru_cache(maxsize=1)
+def _device_probe() -> Tuple[str, int]:
+    """Memoized (platform, n_devices) hardware probe.
 
-    The pallas matmul is a per-device kernel; inside pjit-traced
-    multi-device code the partitioner must see the jnp formulation (a
-    shard_map-aware pallas backend is a ROADMAP item).  Multi-device
-    TPU runs that have wired the kernel under shard_map themselves can
-    still opt in explicitly (arg/env/set_default_backend).
+    ``resolve_backend_name`` runs on *every* dispatch (each qmatmul/qdiv
+    trace), while ``jax.device_count()`` walks the live device list each
+    call — so the probe is sampled once per process.  Tests that fake
+    the device count must call :func:`invalidate_device_probe` after
+    (un)patching.
     """
     try:
-        platform = jax.default_backend()
-        n_devices = jax.device_count()
+        return jax.default_backend(), jax.device_count()
     except Exception:  # pragma: no cover - no devices at all
-        platform, n_devices = "cpu", 1
-    return "pallas" if platform == "tpu" and n_devices == 1 else "jnp"
+        return "cpu", 1
 
 
-def resolve_backend_name(name: Optional[str] = None) -> str:
-    """One selection function for every call site.
+def invalidate_device_probe() -> None:
+    """Drop the memoized (platform, n_devices) sample (test hook)."""
+    _device_probe.cache_clear()
 
-    Precedence: explicit ``name`` > ``$RAPID_BACKEND`` > process default
-    (:func:`set_default_backend`) > autodetect (pallas on TPU, else jnp).
-    ``None`` and "auto" defer to the next level.
+
+def _autodetect(device_local: Optional[bool] = None) -> str:
+    """Hardware default: pallas on TPU wherever the call is device-local.
+
+    The pallas matmul is a per-device kernel, so on a multi-device TPU
+    process the answer depends on the trace context: pjit-traced global
+    code must give the partitioner the jnp formulation, but a
+    ``shard_map`` body already sees per-shard shapes and runs the kernel
+    on the local shard (the EP/TP paths in ``models/moe.py``).
+    ``device_local=None`` consults the axis environment
+    (``compat.in_shard_map``); callers that know their locality (e.g. a
+    shard_map body resolving before entering the region) pass it
+    explicitly.
+    """
+    platform, n_devices = _device_probe()
+    if platform != "tpu":
+        return "jnp"
+    if n_devices == 1:
+        return "pallas"
+    if device_local is None:
+        device_local = compat.in_shard_map()
+    return "pallas" if device_local else "jnp"
+
+
+def _collapse_levels(name: Optional[str]) -> Optional[str]:
+    """The shared arg > env > process-default precedence walk.
+
+    Returns a concrete registry name, :data:`AUTO_HW` when some level
+    explicitly requested the hardware step, or ``None`` when every
+    level deferred — the two terminals (:func:`resolve_backend_name` /
+    :func:`pin_backend_name`) differ only in what they do next.
     """
     for candidate in (name, os.environ.get(ENV_VAR), _DEFAULT):
         if candidate and candidate != "auto":
+            if candidate == AUTO_HW:
+                return AUTO_HW
             if candidate not in _REGISTRY:
                 raise KeyError(
                     f"unknown backend {candidate!r}; have {available_backends()}")
             return candidate
-    return _autodetect()
+    return None
+
+
+def resolve_backend_name(name: Optional[str] = None, *,
+                         device_local: Optional[bool] = None) -> str:
+    """One selection function for every call site.
+
+    Precedence: explicit ``name`` > ``$RAPID_BACKEND`` > process default
+    (:func:`set_default_backend`) > autodetect (pallas wherever the call
+    is device-local on TPU, else jnp).  ``None`` and "auto" defer to the
+    next level; the :data:`AUTO_HW` sentinel (what :func:`pin_backends`
+    pins on multi-device TPU) jumps straight to autodetect — the env/
+    default levels were already consulted at pin time.  ``device_local``
+    overrides the in-shard_map detection at the hardware level.
+    """
+    got = AUTO_HW if name == AUTO_HW else _collapse_levels(name)
+    if got is None or got == AUTO_HW:
+        return _autodetect(device_local)
+    return got
+
+
+def pin_backend_name(name: Optional[str] = None) -> str:
+    """Build-time companion of :func:`resolve_backend_name`.
+
+    The arg/env/process-default levels collapse to a concrete registry
+    name *now* (so later env changes cannot flip a compiled kernel
+    choice), but the hardware level stays pinned as :data:`AUTO_HW`
+    exactly when its answer depends on trace context — a multi-device
+    TPU process, where global-view sites must resolve to jnp while
+    shard_map bodies legally run the pallas kernels per shard.  On CPU
+    or a single device the hardware answer is context-free and pins
+    concretely, exactly as before.
+    """
+    got = _collapse_levels(name)
+    if got is not None and got != AUTO_HW:
+        return got
+    platform, n_devices = _device_probe()
+    if platform == "tpu" and n_devices > 1:
+        return AUTO_HW
+    return _autodetect(device_local=False)
+
+
+def resolve_site_device_local(acfg, site: str):
+    """Pin one site of an ApproxConfig from the device-local view.
+
+    The helper model code calls right before building a ``shard_map``
+    body: the body's dispatches are per-shard, so the site's backend is
+    resolved with ``device_local=True`` (an AUTO_HW / auto entry may
+    legally become the pallas kernels on a multi-device process) and
+    written back as a concrete name, fixing the body's kernel choice
+    before tracing begins.  Explicit names pass through unchanged.
+    """
+    name = resolve_backend_name(acfg.backend_for(site), device_local=True)
+    return acfg.with_backends({site: name})
 
 
 def get_backend(name: Optional[str] = None) -> Backend:
@@ -469,18 +578,21 @@ def get_backend(name: Optional[str] = None) -> Backend:
 
 
 def pin_backends(acfg, override: Optional[str] = None):
-    """Collapse an ApproxConfig's site->backend map to concrete names.
+    """Collapse an ApproxConfig's site->backend map at build time.
 
     Every site (plus the default) is resolved through
-    :func:`resolve_backend_name` exactly once, so engines / train steps
+    :func:`pin_backend_name` exactly once, so engines / train steps
     built from the returned config cannot have env-var changes silently
     flip the compiled kernel choice inside a later trace.  ``override``
-    (an explicit registry name) wins at every site.
+    (an explicit registry name) wins at every site.  On a multi-device
+    TPU, sites left to hardware autodetect pin as :data:`AUTO_HW` — the
+    one selection whose answer legitimately differs per call site
+    (jnp under pjit, pallas inside shard_map bodies).
     """
     from repro.configs.base import BACKEND_SITES  # local: avoid cycle
 
     sites = {
-        site: resolve_backend_name(override or acfg.backend_for(site))
+        site: pin_backend_name(override or acfg.backend_for(site))
         for site in ("default",) + BACKEND_SITES
     }
     return dataclass_replace(acfg, backends=sites)

@@ -25,7 +25,15 @@ with strict precedence:
 
 ``backend=None`` (or ``"auto"``) at any call site defers down the list,
 so models/configs can stay backend-agnostic and the launcher (or an env
-var in CI) picks the execution path.
+var in CI) picks the execution path.  The hardware level is
+manual-mesh-aware: on a multi-device TPU it answers ``jnp`` for
+pjit-visible (global-view) call sites but ``pallas`` when the op is
+traced inside a ``shard_map`` body (``repro.compat.in_shard_map``),
+where shapes are per-shard and the per-device kernel is legal — this is
+how the EP/TP paths in ``models/moe.py`` run the kernels on local
+shards.  Resolution happens at trace time of the call site, so the same
+pinned ``backend.AUTO_HW`` entry can route one way under pjit and the
+other inside a manual region of the same program.
 
 Divider registry entries
 ------------------------

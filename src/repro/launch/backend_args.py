@@ -36,14 +36,36 @@ def add_backend_args(ap) -> None:
                          "--site-backend logits=jnp")
 
 
+def _valid_backend_names():
+    from repro.core.backend import AUTO_HW, available_backends
+
+    return available_backends() + ("auto", AUTO_HW)
+
+
 def parse_site_backends(entries: Iterable[str]) -> dict:
-    """Parse repeated ``SITE=NAME`` strings into a site->backend map."""
+    """Parse repeated ``SITE=NAME`` strings into a site->backend map.
+
+    Both halves are validated here so a flag typo dies as a clean
+    one-line CLI error instead of a framework traceback (a bad site used
+    to surface as a KeyError from ``ApproxConfig.__post_init__``, a bad
+    name only at the first dispatch inside tracing).
+    """
+    from repro.configs.base import BACKEND_SITES
+
     table = {}
+    sites = BACKEND_SITES + ("default",)
     for entry in entries:
         site, sep, name = entry.partition("=")
         if not sep or not site or not name:
             raise SystemExit(
                 f"--site-backend expects SITE=NAME, got {entry!r}")
+        if site not in sites:
+            raise SystemExit(
+                f"--site-backend: unknown site {site!r}; have {sites}")
+        if name not in _valid_backend_names():
+            raise SystemExit(
+                f"--site-backend: unknown backend {name!r}; have "
+                f"{_valid_backend_names()}")
         table[site] = name
     return table
 
@@ -52,11 +74,16 @@ def apply_backend_args(cfg: ModelConfig, args) -> ModelConfig:
     """Fold the parsed flags into the config's per-site backend map.
 
     ``--backend`` resets every site first; ``--site-backend`` entries
-    then override individual sites (validation of site keys happens in
-    ``ApproxConfig``, of registry names at resolve time).
+    then override individual sites (both validated against the site
+    table / registry before they touch the config).
     """
-    if getattr(args, "backend", None):
-        cfg = cfg.with_backend(args.backend)
+    backend = getattr(args, "backend", None)
+    if backend:
+        if backend not in _valid_backend_names():
+            raise SystemExit(
+                f"--backend: unknown backend {backend!r}; have "
+                f"{_valid_backend_names()}")
+        cfg = cfg.with_backend(backend)
     sites = parse_site_backends(getattr(args, "site_backend", []) or [])
     if sites:
         cfg = cfg.with_site_backends(sites)

@@ -14,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import SHAPES, ModelConfig
 from repro.models.model import Model, _VIS_DIM
-from repro.models.params import P, pspec_tree, shape_tree
+from repro.models.params import pspec_tree, shape_tree
 
 __all__ = ["batch_specs", "cell_struct", "supports_shape", "skip_reason"]
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, RAPID, get_config
 from repro.data.pipeline import SyntheticLM

@@ -9,7 +9,6 @@ for ``lax.scan``.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import mamba as mb

@@ -400,15 +400,24 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
 
     if seq_shard_axis is None:
         m, l, acc = local_stats(qf, k_cache, v_cache, slot_positions)
+        out = _online_softmax_combine(acc, l, m, acfg)
     else:
         from repro.compat import shard_map
+        from repro.core import backend as be
 
         mesh = ctx.mesh
         batch_ax = ctx.rules.get("batch") if q.shape[0] > 1 else None
         spec_q = PartitionSpec(batch_ax, None, None, None)
         spec_c = PartitionSpec(batch_ax, seq_shard_axis, None, None)
         spec_p = PartitionSpec(batch_ax, seq_shard_axis)
-        spec_s = PartitionSpec(batch_ax, None, None)
+
+        # the softmax combine runs *inside* the manual region: after the
+        # psums every device holds the full stats, so dividing per shard
+        # is replicated work, but it lets the fused div kernel serve the
+        # combine (device-local pallas is legal here; resolve it as such)
+        acfg_local = acfg
+        if acfg.div("softmax"):
+            acfg_local = be.resolve_site_device_local(acfg, "softmax")
 
         def shmap_body(qc, kc, vc, sp):
             m, l, acc = local_stats(qc, kc, vc, sp)
@@ -416,17 +425,15 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
             corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
             l_g = jax.lax.psum(l * corr, seq_shard_axis)
             acc_g = jax.lax.psum(acc * corr[..., None], seq_shard_axis)
-            return m_g, l_g, acc_g
+            return _online_softmax_combine(acc_g, l_g, m_g, acfg_local)
 
-        m, l, acc = shard_map(
+        out = shard_map(
             shmap_body, mesh=mesh,
             in_specs=(spec_q, spec_c, spec_c, spec_p),
-            out_specs=(spec_s, spec_s,
-                       PartitionSpec(batch_ax, None, None, None)),
+            out_specs=PartitionSpec(batch_ax, None, None, None),
             check_vma=False,
         )(qf, k_cache, v_cache, slot_positions)
 
-    out = _online_softmax_combine(acc, l, m, acfg)
     return out.reshape(B, H * hd).astype(q.dtype)
 
 

@@ -17,7 +17,6 @@ stubs per the assignment: batches carry precomputed embeddings.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

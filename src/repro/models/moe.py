@@ -11,6 +11,13 @@ is done locally per device with a static-shape sort + capacity buffer
 The layer runs in two modes sharing the same routing core:
   * ``mesh=None``  — pure local execution (smoke tests, CPU examples);
   * ``shard_map``  — the production EP path used by the dry-run.
+
+Backend routing: the per-expert contractions inside the shard_map bodies
+are *device-local* (they see per-shard shapes), so the "mlp" site's
+backend is resolved once with ``device_local=True`` before the bodies
+are built — on a multi-device TPU that turns the hardware-autodetect
+(``AUTO_HW``) pin into the pallas kernels on local shards, where the
+old code silently fell back to the jnp formulation.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from jax.sharding import PartitionSpec
 from repro.compat import shard_map
 
 from repro.configs.base import ApproxConfig, ModelConfig
+from repro.core import backend as be
 from repro.core.ops import qmatmul_batched
 from repro.models.layers import ParallelCtx, mlp, mlp_params
 from repro.models.params import P
@@ -43,6 +51,21 @@ def moe_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     if cfg.shared_expert:
         p["shared"] = mlp_params(cfg, F)
     return p
+
+
+def _manual_acfg(acfg: Optional[ApproxConfig]) -> Optional[ApproxConfig]:
+    """Resolve the expert-compute ("mlp") backend for a shard_map body.
+
+    The body's call sites are device-local (per-shard shapes), so the
+    hardware level may legally pick the per-device pallas kernels even
+    on a multi-device process.  Resolving once here (device_local=True)
+    pins the body's kernel choice before tracing begins instead of
+    relying on in-trace axis-env detection at every dispatch; explicit
+    per-site names pass through untouched.
+    """
+    if acfg is None or not acfg.mul("mlp"):
+        return acfg
+    return be.resolve_site_device_local(acfg, "mlp")
 
 
 def _expert_compute(buf, w1, w3, w2, acfg: Optional[ApproxConfig] = None):
@@ -187,6 +210,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
         ).reshape(B, S, D)
     else:
         mesh = ctx.mesh
+        acfg = _manual_acfg(cfg.approx)  # device-local kernel choice
         batch_axes = ctx.data_axes if B > 1 else ()
         model_axis = ctx.rules.get("expert") or "model"
         fsdp_axis = ctx.rules.get("expert_ff")  # ff dim sharded at rest
@@ -229,7 +253,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_a2a(
                     xl.reshape(bl * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_loc=e_loc,
-                    model_axis=model_axis, acfg=cfg.approx,
+                    model_axis=model_axis, acfg=acfg,
                 )
                 return out.reshape(bl, sl, D)
 
@@ -267,7 +291,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_and_compute(
                     xg.reshape(bg * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_lo=mi * e_loc,
-                    acfg=cfg.approx,
+                    acfg=acfg,
                 )
                 out = jax.lax.psum(out, (model_axis, fsdp_axis))
                 # take this device's batch rows back
@@ -300,7 +324,7 @@ def moe_ffn(x, params, cfg: ModelConfig, ctx: ParallelCtx,
                 out = _route_and_compute(
                     xl.reshape(bl * sl, D), rw, w1, w3, w2,
                     n_experts=E, k=k, cap=cap, e_lo=mi * e_loc,
-                    acfg=cfg.approx,
+                    acfg=acfg,
                 )
                 out = jax.lax.psum(out, model_axis)
                 return out.reshape(bl, sl, D)

@@ -32,7 +32,11 @@ class ServeEngine:
     # approximate-arithmetic backend (registry name); None defers to the
     # model config's per-site map / env / hardware autodetect, an
     # explicit name overrides every site.  Resolved once at engine build
-    # so prefill+decode compile against concrete per-site backends.
+    # so prefill+decode compile against pinned per-site backends — on a
+    # multi-device TPU, auto sites pin as backend.AUTO_HW, which
+    # resolves per call site at trace time (jnp under pjit, pallas
+    # inside shard_map bodies) from the memoized hardware probe only,
+    # so post-build env changes still cannot flip the compiled kernels.
     backend: Optional[str] = None
 
     def __post_init__(self):

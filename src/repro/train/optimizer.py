@@ -9,7 +9,7 @@ chip HBM (factored second moment: O(rows+cols) per matrix).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

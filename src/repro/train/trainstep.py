@@ -34,7 +34,12 @@ def _pin_backend(model: Model, backend: Optional[str]) -> Model:
     Pinning here (instead of per-trace inside jit) means env-var changes
     after the step is built cannot silently flip the compiled kernel
     choice between microbatches or across recompiles; an explicit
-    ``backend`` name overrides every per-site entry.
+    ``backend`` name overrides every per-site entry.  On a multi-device
+    TPU, auto sites pin as ``backend.AUTO_HW``: the one selection whose
+    answer legitimately differs per call site (jnp for pjit-visible
+    matmuls, pallas kernels inside the EP/TP shard_map bodies) — it
+    re-reads only the memoized hardware probe at trace time, never the
+    env var.
     """
     pinned = be.pin_backends(model.cfg.approx, backend)
     if pinned == model.cfg.approx:

@@ -72,6 +72,145 @@ def test_qdiv_routes_through_registry():
 
 
 # --------------------------------------------------------------------------
+# hardware probe memoization + manual-mesh (shard_map)-aware autodetect
+# --------------------------------------------------------------------------
+
+@pytest.fixture
+def fake_devices(monkeypatch):
+    """Patch the (platform, n_devices) the probe samples; always leaves
+    the memo invalidated so later tests re-probe the real hardware."""
+
+    def set_probe(platform, n_devices):
+        monkeypatch.setattr(jax, "default_backend", lambda: platform)
+        monkeypatch.setattr(jax, "device_count", lambda: n_devices)
+        be.invalidate_device_probe()
+
+    yield set_probe
+    be.invalidate_device_probe()
+
+
+def test_device_probe_memoized_with_invalidation_hook(monkeypatch):
+    """resolve_backend_name runs per dispatch; the device probe must be
+    sampled once, and invalidate_device_probe() must force a resample
+    (the hook tests faking device counts rely on)."""
+    calls = {"n": 0}
+    real_count = jax.device_count()
+
+    def counting_device_count():
+        calls["n"] += 1
+        return real_count
+
+    monkeypatch.setattr(jax, "device_count", counting_device_count)
+    be.invalidate_device_probe()
+    try:
+        monkeypatch.delenv(be.ENV_VAR, raising=False)
+        for _ in range(5):
+            be.resolve_backend_name(None)
+        assert calls["n"] == 1
+        be.invalidate_device_probe()
+        be.resolve_backend_name(None)
+        assert calls["n"] == 2
+    finally:
+        be.invalidate_device_probe()
+
+
+def test_autodetect_multidevice_tpu_is_manual_region_aware(
+        fake_devices, monkeypatch):
+    """On a multi-device TPU the hardware level answers per call site:
+    jnp from the global (pjit) view, pallas when the call is device-
+    local — either declared (device_local=True) or detected via the
+    axis env inside a real shard_map body."""
+    from jax.sharding import PartitionSpec
+
+    from repro import compat
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    be.set_default_backend(None)
+    fake_devices("tpu", 8)
+    assert be.resolve_backend_name(None) == "jnp"
+    assert be.resolve_backend_name(None, device_local=True) == "pallas"
+    assert be.resolve_backend_name(None, device_local=False) == "jnp"
+
+    seen = []
+    mesh = jax.make_mesh((1,), ("d",))
+
+    def body(v):
+        seen.append(be.resolve_backend_name(None))
+        return v
+
+    compat.shard_map(body, mesh=mesh, in_specs=PartitionSpec("d"),
+                     out_specs=PartitionSpec("d"), check_vma=False)(
+        jnp.arange(4, dtype=jnp.float32))
+    assert seen == ["pallas"]
+
+    # single-device TPU: pallas unconditionally (as before)
+    fake_devices("tpu", 1)
+    assert be.resolve_backend_name(None) == "pallas"
+    # CPU: jnp regardless of locality
+    fake_devices("cpu", 8)
+    assert be.resolve_backend_name(None, device_local=True) == "jnp"
+
+
+def test_pin_defers_only_the_context_dependent_hardware_level(
+        fake_devices, monkeypatch):
+    """pin_backends collapses arg/env/default eagerly; only on a multi-
+    device TPU does the hardware level pin as AUTO_HW — and AUTO_HW then
+    resolves from the memoized probe + trace context alone, so env-var
+    changes after the pin cannot flip the kernel choice."""
+    from repro.configs.base import BACKEND_SITES, ApproxConfig
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    be.set_default_backend(None)
+
+    # CPU: concrete pin, exactly as before
+    fake_devices("cpu", 8)
+    pinned = be.pin_backends(ApproxConfig())
+    for site in ("default",) + BACKEND_SITES:
+        assert pinned.backend_for(site) == "jnp"
+
+    # multi-device TPU: the hardware answer depends on the call site
+    fake_devices("tpu", 8)
+    pinned = be.pin_backends(ApproxConfig())
+    for site in ("default",) + BACKEND_SITES:
+        assert pinned.backend_for(site) == be.AUTO_HW
+    # global view -> jnp; device-local (shard_map body) view -> pallas
+    assert be.resolve_backend_name(be.AUTO_HW) == "jnp"
+    assert be.resolve_backend_name(be.AUTO_HW, device_local=True) == "pallas"
+    # the pin property: env changes after build don't reach AUTO_HW
+    monkeypatch.setenv(be.ENV_VAR, "pallas-interpret")
+    assert be.resolve_backend_name(be.AUTO_HW) == "jnp"
+    assert be.resolve_backend_name(be.AUTO_HW, device_local=True) == "pallas"
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+
+    # explicit names and env still pin concretely on the same hardware
+    assert be.pin_backends(ApproxConfig(), "jnp").backend_for("mlp") == "jnp"
+    monkeypatch.setenv(be.ENV_VAR, "pallas-interpret")
+    assert (be.pin_backends(ApproxConfig()).backend_for("mlp")
+            == "pallas-interpret")
+
+
+def test_moe_manual_acfg_resolves_device_local(fake_devices, monkeypatch):
+    """The MoE layer resolves its expert-compute backend from the
+    device-local view before building shard_map bodies: a pinned AUTO_HW
+    becomes the pallas kernels on a multi-device TPU."""
+    from repro.configs.base import ApproxConfig
+    from repro.models.moe import _manual_acfg
+
+    monkeypatch.delenv(be.ENV_VAR, raising=False)
+    be.set_default_backend(None)
+    fake_devices("tpu", 8)
+    pinned = be.pin_backends(ApproxConfig(mul_scheme="rapid10"))
+    assert pinned.backend_for("mlp") == be.AUTO_HW
+    assert _manual_acfg(pinned).backend_for("mlp") == "pallas"
+    # explicit per-site names pass through untouched
+    explicit = ApproxConfig(mul_scheme="rapid10", backends="pallas-interpret")
+    assert _manual_acfg(explicit).backend_for("mlp") == "pallas-interpret"
+    # no active mul scheme: nothing to resolve
+    inactive = ApproxConfig()
+    assert _manual_acfg(inactive) is inactive
+
+
+# --------------------------------------------------------------------------
 # LUT memoization
 # --------------------------------------------------------------------------
 

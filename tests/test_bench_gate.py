@@ -1,0 +1,89 @@
+"""The benchmark-regression gate's diff logic (benchmarks/run.py).
+
+The CI bench-gate job runs ``benchmarks.run --smoke --json BENCH_PR.json
+--baseline BENCH_baseline.json``; these tests pin the comparison
+semantics so the gate can't silently stop gating.
+"""
+import json
+import subprocess
+import sys
+
+from benchmarks.run import MIN_GATED_WALL_S, compare_to_baseline
+
+
+def test_identical_results_pass():
+    base = {"a": {"status": "ok", "wall_s": 10.0}}
+    assert compare_to_baseline(dict(base), base, tolerance=4.0) == []
+
+
+def test_missing_and_failed_benchmarks_are_regressions():
+    base = {"a": {"status": "ok", "wall_s": 10.0},
+            "b": {"status": "ok", "wall_s": 5.0}}
+    got = {"a": {"status": "failed", "wall_s": 1.0, "error": "boom"}}
+    problems = compare_to_baseline(got, base, tolerance=4.0)
+    assert len(problems) == 2
+    assert any("a" in p and "failed" in p for p in problems)
+    assert any("b" in p and "did not run" in p for p in problems)
+
+
+def test_wall_time_gate_uses_tolerance_ratio():
+    base = {"a": {"status": "ok", "wall_s": 10.0}}
+    ok = {"a": {"status": "ok", "wall_s": 39.0}}
+    slow = {"a": {"status": "ok", "wall_s": 41.0}}
+    assert compare_to_baseline(ok, base, tolerance=4.0) == []
+    problems = compare_to_baseline(slow, base, tolerance=4.0)
+    assert problems and "exceeds" in problems[0]
+
+
+def test_subsecond_baselines_are_jitter_proof():
+    """A 0.01s baseline module must not fail the PR because the runner
+    took 0.5s: the floor MIN_GATED_WALL_S * tolerance applies."""
+    base = {"tiny": {"status": "ok", "wall_s": 0.01}}
+    got = {"tiny": {"status": "ok",
+                    "wall_s": MIN_GATED_WALL_S * 4.0 - 0.1}}
+    assert compare_to_baseline(got, base, tolerance=4.0) == []
+    too_slow = {"tiny": {"status": "ok",
+                         "wall_s": MIN_GATED_WALL_S * 4.0 + 0.1}}
+    assert compare_to_baseline(too_slow, base, tolerance=4.0)
+
+
+def test_new_benchmarks_are_not_gated():
+    base = {"a": {"status": "ok", "wall_s": 1.0}}
+    got = {"a": {"status": "ok", "wall_s": 1.0},
+           "brand_new": {"status": "failed", "wall_s": 0.0}}
+    # the failed *new* module still fails the run via the harness exit
+    # code; the baseline diff itself only gates known benchmarks
+    assert compare_to_baseline(got, base, tolerance=4.0) == []
+
+
+def test_cli_baseline_diff_exit_codes(tmp_path):
+    """End-to-end through the argparse surface: a fabricated PR result
+    vs a fabricated baseline, both regression and pass cases — without
+    running any real benchmark (empty names list is rejected, so use
+    the fast roofline_report module)."""
+    baseline = tmp_path / "base.json"
+    baseline.write_text(json.dumps({
+        "smoke": True,
+        "benchmarks": {"roofline_report": {"status": "ok", "wall_s": 0.1}},
+    }))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "roofline_report",
+         "--smoke", "--json", str(tmp_path / "pr.json"),
+         "--baseline", str(baseline), "--tolerance", "4.0"],
+        capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "benchmark gate OK" in r.stdout
+    written = json.loads((tmp_path / "pr.json").read_text())
+    assert written["benchmarks"]["roofline_report"]["status"] == "ok"
+
+    # baseline names a module the run skipped -> regression, exit 1
+    baseline.write_text(json.dumps({
+        "smoke": True,
+        "benchmarks": {"fused_div": {"status": "ok", "wall_s": 1.0}},
+    }))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "roofline_report",
+         "--smoke", "--baseline", str(baseline)],
+        capture_output=True, text=True, timeout=300)
+    assert r.returncode == 1
+    assert "did not run" in r.stdout

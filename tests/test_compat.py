@@ -1,6 +1,9 @@
 """The jax-version compat shim: both shard_map signatures, monkeypatched,
-plus the real resolution on the installed jax."""
+plus the real resolution on the installed jax; the manual-mesh (axis-env)
+helpers against both API generations (legacy frame stack vs modern
+AxisEnv) and against the real shard_map."""
 import inspect
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
@@ -96,3 +99,105 @@ def test_shard_map_executes_on_installed_jax():
         check_vma=False,
     )(x)
     np.testing.assert_allclose(np.asarray(out), np.arange(8) * 2.0)
+
+
+# --------------------------------------------------------------------------
+# manual-mesh (axis-env) helpers: both API generations, one contract
+# --------------------------------------------------------------------------
+
+class _Frame(SimpleNamespace):
+    """Legacy AxisEnvFrame stand-in (jax <= 0.4.35): .name / .size."""
+
+
+def _legacy_core(frames):
+    """A jax.core lookalike exposing only the legacy frame-stack surface."""
+    return SimpleNamespace(
+        thread_local_state=SimpleNamespace(
+            trace_state=SimpleNamespace(axis_env=frames)))
+
+
+def _modern_core(axis_sizes):
+    """A jax.core lookalike exposing only the 0.4.36+/0.8+ get_axis_env."""
+    env = SimpleNamespace(axis_sizes=axis_sizes, spmd_axis_names=set())
+    return SimpleNamespace(get_axis_env=lambda: env)
+
+
+def test_axis_sizes_pure_helpers_both_generations():
+    frames = [_Frame(name="data", size=4), _Frame(name="model", size=2)]
+    legacy = compat.axis_sizes_from_frames(frames)
+    modern = compat.axis_sizes_from_env(
+        SimpleNamespace(axis_sizes={"data": 4, "model": 2}))
+    assert legacy == modern == {"data": 4, "model": 2}
+    # empty environments read as "not in a manual region" in both shapes
+    assert compat.axis_sizes_from_frames([]) == {}
+    assert compat.axis_sizes_from_env(SimpleNamespace(axis_sizes={})) == {}
+    assert compat.axis_sizes_from_env(SimpleNamespace()) == {}
+
+
+def test_axis_sizes_from_frames_skips_unnamed_axes():
+    """The no_axis_name sentinel an unnamed vmap pushes is not a manual
+    mesh axis and must not count as shard_map evidence."""
+    sentinel = object()  # stands in for jax.core.no_axis_name
+    frames = [_Frame(name=sentinel, size=3), _Frame(name="model", size=2),
+              _Frame(name="dropme", size=None)]
+    assert compat.axis_sizes_from_frames(frames) == {"model": 2}
+
+
+def test_axis_env_reader_identical_across_api_generations():
+    """The resolved reader behaves identically whether the core exposes
+    the 0.4.x frame stack or the 0.8+ AxisEnv — same sizes, same
+    in-region verdict, same local-axis products."""
+    sizes = {"data": 4, "model": 2}
+    legacy_reader = compat.axis_env_reader_for(
+        _legacy_core([_Frame(name=n, size=s) for n, s in sizes.items()]))
+    modern_reader = compat.axis_env_reader_for(_modern_core(dict(sizes)))
+    assert legacy_reader() == modern_reader() == sizes
+    # a core exposing neither surface: never inside a manual region
+    assert compat.axis_env_reader_for(SimpleNamespace())() == {}
+
+
+def test_manual_helpers_through_monkeypatched_modern_core(monkeypatch):
+    """axis_env_sizes() reads through jax.core when it exposes the
+    modern surface (the 0.8+ shape, exercised on whatever jax is
+    installed)."""
+    env = SimpleNamespace(axis_sizes={"model": 8}, spmd_axis_names=set())
+    monkeypatch.setattr(jax.core, "get_axis_env", lambda: env,
+                        raising=False)
+    assert compat.axis_env_sizes() == {"model": 8}
+    assert compat.in_shard_map()
+    assert compat.manual_axis_size("model") == 8
+    with pytest.raises(KeyError):
+        compat.manual_axis_size("data")
+
+
+def test_manual_axis_size_products():
+    frames = [_Frame(name="data", size=4), _Frame(name="model", size=2)]
+    reader = compat.axis_env_reader_for(_legacy_core(frames))
+    # product semantics via the pure reader feeding a fake jax.core
+    sizes = reader()
+    assert sizes["data"] * sizes["model"] == 8
+
+
+def test_axis_env_on_installed_jax_inside_and_outside_shard_map():
+    """The real thing: outside any region the env is empty; inside a
+    compat.shard_map body every mesh axis (even 1-sized) is bound, so
+    in_shard_map() is True and sizes/products resolve."""
+    from jax.sharding import PartitionSpec
+
+    assert compat.axis_env_sizes() == {}
+    assert not compat.in_shard_map()
+
+    seen = []
+    mesh = jax.make_mesh((1,), ("d",))
+
+    def body(v):
+        seen.append((compat.axis_env_sizes(), compat.in_shard_map(),
+                     compat.manual_axis_size("d")))
+        return v
+
+    compat.shard_map(body, mesh=mesh, in_specs=PartitionSpec("d"),
+                     out_specs=PartitionSpec("d"), check_vma=False)(
+        jnp.arange(4, dtype=jnp.float32))
+    assert seen == [({"d": 1}, True, 1)]
+    # and the env unwinds cleanly after the region
+    assert compat.axis_env_sizes() == {}

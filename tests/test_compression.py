@@ -9,7 +9,6 @@ from repro.models.layers import ParallelCtx
 from repro.models.model import Model
 from repro.train.compression import ef_compress, ef_state
 from repro.train.optimizer import OptConfig, make_optimizer
-from repro.train.trainstep import make_train_step
 
 
 def test_error_feedback_residual_bounded():

@@ -7,7 +7,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
 

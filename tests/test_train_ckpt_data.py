@@ -1,11 +1,8 @@
 """Training loop, checkpointing (atomicity/resume), data determinism,
 MoE routing invariants."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import get_config
