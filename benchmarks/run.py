@@ -6,6 +6,8 @@
   apps_qor           Figs. 8-10 end-to-end application QoR
   e2e_train          trainability of RAPID arithmetic (loss curves)
   roofline_report    SSRoofline table from the dry-run artifacts
+  serve_load         continuous batching vs fixed-slot under a Poisson
+                     arrival trace (tokens/s + p50/p99 latency)
 
 ``python -m benchmarks.run [name ...] [--smoke]`` — no names runs
 everything.  ``--smoke`` runs every module at tiny shapes / one rep so
@@ -33,7 +35,7 @@ import time
 import traceback
 
 ALL = ["table3_accuracy", "table3_throughput", "fused_div", "apps_qor",
-       "e2e_train", "roofline_report"]
+       "e2e_train", "roofline_report", "serve_load"]
 
 #: Below this baseline wall time, the time gate compares against
 #: tolerance * MIN_GATED_WALL_S instead (pure-jitter regime).

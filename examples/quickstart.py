@@ -15,7 +15,8 @@ https://github.com/<org>/<repo>/actions/workflows/ci.yml/badge.svg
                pins — the kernels really run on local shards
   bench-gate   benchmarks.run --smoke + regression diff against the
                committed BENCH_baseline.json (JSON uploaded as a PR
-               artifact)
+               artifact); serve_load additionally asserts continuous
+               batching beats fixed-slot tokens/s at equal KV memory
 """
 import jax
 import jax.numpy as jnp
@@ -105,3 +106,33 @@ from repro import compat
 
 print("\nin shard_map?", compat.in_shard_map(),
       "| axis env:", compat.axis_env_sizes())
+
+# --- continuous-batching serve ------------------------------------------
+# Two serving engines live in repro.serve:
+#   * ServeEngine (engine.py): fixed-slot lockstep — one dense KV cache
+#     of cache_n tokens per slot, the whole batch prefills together and
+#     decodes until the *longest* request finishes.
+#   * ContinuousServeEngine (scheduler.py): a request queue with
+#     per-slot admission, KV in a block-paged pool (paged_kv.py) so
+#     memory scales with live tokens, chunked prefill interleaved with
+#     decode ticks, slot recycling the moment a request completes, and
+#     per-request streaming.  Decode runs one compiled step with fixed
+#     [n_slots, 1] shapes and a dynamic occupancy mask, so mid-flight
+#     admissions/evictions never retrace.  Greedy outputs are
+#     bit-identical to the fixed-slot engine per request.
+# benchmarks/serve_load.py races the two under a Poisson arrival trace
+# at equal peak KV memory; CI asserts continuous wins tokens/s.
+from repro.configs.base import get_config
+from repro.models.model import Model
+from repro.serve.scheduler import ContinuousServeEngine
+
+cfg = get_config("minicpm_2b").reduced().with_(dtype="float32")
+model = Model(cfg)
+eng = ContinuousServeEngine(model, model.init(jax.random.PRNGKey(0)),
+                            n_slots=2, max_len=32, page_size=8,
+                            prefill_chunk=8)
+print("\nstreaming 3 requests through 2 slots:")
+for ev in eng.stream([[5, 6, 7], [8, 9], [10, 11, 12, 13]], max_new=4):
+    print(f"  rid={ev.rid} token={ev.token} done={ev.done}")
+print("decode compiled", eng.trace_counts["decode"], "time(s); pages free:",
+      eng.alloc.n_free, "/", eng.geom.usable_pages)

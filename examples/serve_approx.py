@@ -1,33 +1,74 @@
-"""Serve a small model with batched requests, comparing exact vs RAPID
-decode outputs (token agreement + throughput).
+"""Serve a small model with continuous batching, comparing exact vs
+RAPID decode outputs (token agreement) under a Poisson arrival trace
+(per-request streaming, tokens/s, p50/p99 latency).
 
 Run: PYTHONPATH=src python examples/serve_approx.py
+
+The engine (repro.serve.scheduler.ContinuousServeEngine) admits
+requests into slots as they arrive, interleaves chunked prefill with
+decode ticks, stores KV in a block-paged pool, and streams each
+request's tokens back as StreamEvents the moment they are sampled —
+see benchmarks/serve_load.py for the head-to-head against the
+fixed-slot lockstep engine.
 """
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.base import RAPID, get_config
-from repro.models.layers import ParallelCtx
 from repro.models.model import Model
-from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousServeEngine
+
+
+def make_trace(seed=0, n_requests=8, mean_interarrival_s=0.02):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival_s, n_requests))
+    return [{
+        "arrival_s": float(arrivals[i]),
+        "prompt": [1 + int(t) for t in rng.integers(0, 300, 6 + i % 5)],
+        "out_len": int((4, 4, 4, 24)[i % 4]),  # one straggler per 4
+    } for i in range(n_requests)]
+
+
+def serve(model, params, trace):
+    """Arrival-driven loop: submit on arrival, stream until drained."""
+    eng = ContinuousServeEngine(model, params, n_slots=4, max_len=64,
+                                page_size=8, prefill_chunk=16)
+    eng.generate([[1, 2]], max_new=2)  # warmup: compile both phases
+    t0 = time.perf_counter()
+    outs, done_at, rid_to_i, nxt = [[] for _ in trace], [0.0] * len(trace), \
+        {}, 0
+    while nxt < len(trace) or eng.pending:
+        now = time.perf_counter() - t0
+        while nxt < len(trace) and trace[nxt]["arrival_s"] <= now:
+            rid = eng.submit(trace[nxt]["prompt"],
+                             max_new=trace[nxt]["out_len"])
+            rid_to_i[rid] = nxt
+            nxt += 1
+        for ev in eng.step():  # one admit + prefill-chunk + decode tick
+            if ev.token is not None:
+                outs[rid_to_i[ev.rid]].append(ev.token)
+            if ev.done:
+                done_at[rid_to_i[ev.rid]] = time.perf_counter() - t0
+    wall = time.perf_counter() - t0
+    lat = [done_at[i] - trace[i]["arrival_s"] for i in range(len(trace))]
+    return outs, wall, lat
 
 
 def main():
     base = get_config("minicpm_2b").reduced().with_(dtype="float32")
-    prompts = [[1 + (7 * i + j) % 300 for j in range(6 + i % 3)]
-               for i in range(8)]
+    trace = make_trace()
     outs = {}
     for mode in ("exact", "rapid"):
         cfg = base if mode == "exact" else base.with_(approx=RAPID)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        eng = ServeEngine(model, params, ParallelCtx(), cache_n=64)
-        t0 = time.time()
-        outs[mode] = eng.generate(prompts, max_new=12)
-        dt = time.time() - t0
+        outs[mode], wall, lat = serve(model, params, trace)
         n = sum(len(o) for o in outs[mode])
-        print(f"{mode:6s}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+        print(f"{mode:6s}: {n} tokens in {wall:.2f}s ({n/wall:.1f} tok/s)  "
+              f"latency p50 {np.percentile(lat, 50)*1e3:.0f}ms  "
+              f"p99 {np.percentile(lat, 99)*1e3:.0f}ms")
     agree = sum(
         a == b for oa, ob in zip(outs["exact"], outs["rapid"])
         for a, b in zip(oa, ob))

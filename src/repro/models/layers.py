@@ -29,6 +29,7 @@ __all__ = [
     "attention_params",
     "attention",
     "decode_attention",
+    "chunk_cache_attention",
     "mlp_params",
     "mlp",
     "norm_params",
@@ -375,22 +376,33 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
     """Single-token attention against a (possibly ring) KV cache.
 
     q: [B, H, hd]; caches: [B, C, KV, hd]; slot_positions: [B, C] absolute
-    positions stored in each cache slot (MAX_INT = empty).  When
-    ``seq_shard_axis`` is given the cache length axis is sharded over that
-    mesh axis and partial softmax stats are combined with collectives
-    (flash-decode) — used by the 500k-context cells.
+    positions stored in each cache slot (MAX_INT = empty).  ``pos`` is the
+    current absolute position — a scalar (lockstep batch) or an int32
+    ``[B]`` vector (continuous batching: every slot decodes at its own
+    depth).  When ``seq_shard_axis`` is given the cache length axis is
+    sharded over that mesh axis and partial softmax stats are combined
+    with collectives (flash-decode) — used by the 500k-context cells.
     """
     B, H, hd = q.shape
     KV = k_cache.shape[2]
     G = H // KV
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     qf = (q.astype(jnp.float32) * scale).reshape(B, KV, G, hd)
+    # [B] per-slot positions broadcast against [B, C] slot maps; the
+    # flash-decode shard_map path keeps the scalar-only contract
+    posq = jnp.asarray(pos)
+    if posq.ndim == 1:
+        if seq_shard_axis is not None:
+            raise NotImplementedError(
+                "per-slot pos vectors are not supported on the "
+                "sequence-sharded flash-decode path")
+        posq = posq[:, None]
 
     def local_stats(qc, kc, vc, sp):
         s = jnp.einsum("bkgh,bckh->bkgc", qc, kc.astype(jnp.float32))
-        mask = sp <= pos
+        mask = sp <= posq
         if window:
-            mask &= sp > pos - window
+            mask &= sp > posq - window
         s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
         m = s.max(axis=-1)
         p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
@@ -435,6 +447,37 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
         )(qf, k_cache, v_cache, slot_positions)
 
     return out.reshape(B, H * hd).astype(q.dtype)
+
+
+def chunk_cache_attention(q, k_cache, v_cache, q_pos, kv_pos, window: int,
+                          acfg: ApproxConfig):
+    """Multi-token chunk attention against a per-slot cache view.
+
+    The chunked-prefill analogue of :func:`decode_attention`: ``S`` new
+    query tokens of each slot attend to that slot's cached prefix (which
+    already includes the chunk itself — callers write k/v before
+    reading).  q: [B, S, H, hd]; caches: [B, C, KV, hd]; q_pos: [B, S]
+    absolute query positions; kv_pos: [B, C] absolute positions stored
+    per cache slot (MAX_INT = empty, which causality masks out).  Same
+    max-subtracted formulation and registry softmax combine as the
+    decode path, so the two agree on fully-masked rows.
+    """
+    B, S, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,bckh->bskgc", qf, k_cache.astype(jnp.float32))
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]  # [B, S, C]
+    if window:
+        mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1)
+    p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bskgc,bckh->bskgh", p, v_cache.astype(jnp.float32))
+    out = _online_softmax_combine(acc, l, m, acfg)
+    return out.reshape(B, S, H * hd).astype(q.dtype)
 
 
 # --------------------------------------------------------------------------

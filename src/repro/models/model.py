@@ -31,7 +31,9 @@ from repro.models.transformer import (
     attn_cache_specs,
     block_apply,
     block_decode,
+    block_decode_paged,
     block_params,
+    paged_attn_cache_specs,
 )
 
 __all__ = ["Model"]
@@ -304,10 +306,29 @@ class Model:
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-    def cache_specs(self, batch: int, cache_n: int) -> dict:
-        """Decode-cache spec tree for a cache of ``cache_n`` slots."""
+    def cache_specs(self, batch: int, cache_n: int, n_pages: int = 0,
+                    page_size: int = 0) -> dict:
+        """Decode-cache spec tree for a cache of ``cache_n`` slots.
+
+        With ``n_pages``/``page_size`` set, returns the *block-paged*
+        cache instead: per-layer KV pools ``[n_pages, page_size, KV,
+        hd]`` shared by every slot through a page table (which lives
+        host-side in the serve scheduler, not in this tree) — see
+        ``repro.serve.paged_kv``.  Paged caches carry no ``pos``/
+        ``slots`` entries; per-slot positions are step arguments.
+        """
         cfg = self.cfg
         fam = cfg.family
+        if n_pages or page_size:
+            if fam not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"paged KV caches need pure-attention decode; family "
+                    f"{fam!r} carries recurrent/cross state")
+            lc = paged_attn_cache_specs(cfg, n_pages, page_size)
+            return {"layers": _stack(lc, cfg.n_layers) if cfg.scan_layers
+                    else {f"l{i}": paged_attn_cache_specs(cfg, n_pages,
+                                                          page_size)
+                          for i in range(cfg.n_layers)}}
         C = min(cache_n, cfg.sliding_window) if cfg.sliding_window else cache_n
         cache_batch_ax = "batch" if batch > 1 else None
         specs: dict = {
@@ -363,6 +384,60 @@ class Model:
     def init_cache(self, batch: int, cache_n: int):
         return materialize(self.cache_specs(batch, cache_n),
                            jax.random.PRNGKey(0), "float32")
+
+    def init_paged_cache(self, n_pages: int, page_size: int):
+        return materialize(self.cache_specs(0, 0, n_pages, page_size),
+                           jax.random.PRNGKey(0), "float32")
+
+    def decode_paged(self, params, tokens, cache, page_table, offsets,
+                     n_valid, ctx: ParallelCtx):
+        """Paged multi-token step for continuous batching.
+
+        One compiled function serves both engine phases: the decode tick
+        (``tokens`` [n_slots, 1], every live slot advances one token at
+        its own depth) and a chunked-prefill tick (``tokens`` [1, S],
+        one slot absorbs a prompt chunk).  ``offsets`` [B] is each
+        slot's stored-KV length before this call, ``n_valid`` [B] how
+        many of the S tokens are real (0 = slot inactive; its writes
+        are redirected to the scratch page and its logits garbage).
+
+        Returns (logits [B, V] at each row's last valid token, cache).
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"decode_paged supports attention families; got "
+                f"{cfg.family!r}")
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        x = ctx.shard(x, "batch", None, "act_embed")
+        positions = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        valid = jnp.arange(S, dtype=jnp.int32)[None] < n_valid[:, None]
+        kv_len = offsets + n_valid
+
+        def body(h, xs):
+            lp, lc = xs
+            h, nc = block_decode_paged(h, lp, lc, page_table, positions,
+                                       valid, kv_len, cfg, ctx,
+                                       moe_layer=cfg.n_experts > 0,
+                                       norm_kind=cfg.norm)
+            return h, nc
+
+        new_cache = dict(cache)
+        if cfg.scan_layers:
+            x, ncl = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        else:
+            ncl = {}
+            for i in range(cfg.n_layers):
+                x, ncl[f"l{i}"] = body(x, (params["blocks"][f"l{i}"],
+                                           cache["layers"][f"l{i}"]))
+        new_cache["layers"] = ncl
+
+        x = apply_norm(x, params["final_norm"], cfg, cfg.norm)
+        last = jnp.clip(n_valid - 1, 0, S - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = self._logits(params, xl, ctx)[:, 0]
+        return logits, new_cache
 
     def decode_step(self, params, tokens, cache, ctx: ParallelCtx,
                     seq_shard_axis: Optional[str] = None):

@@ -25,7 +25,9 @@ __all__ = [
     "block_params",
     "block_apply",
     "block_decode",
+    "block_decode_paged",
     "attn_cache_specs",
+    "paged_attn_cache_specs",
     "cross_attention_block",
 ]
 
@@ -126,6 +128,93 @@ def attn_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
         p["cv"] = P((batch, cross_len, KV, hd), (cache_batch_ax, None, "kv", None),
                     "zeros", dtype=dt)
     return p
+
+
+def paged_attn_cache_specs(cfg: ModelConfig, n_pages: int,
+                           page_size: int) -> dict:
+    """P-spec tree for one layer's block-paged KV pool.
+
+    Unlike :func:`attn_cache_specs` there is no batch dim: slots own
+    pages of the shared ``[n_pages, page_size, KV, hd]`` pool through a
+    page table, so memory scales with live tokens, not slots x cache_n.
+    """
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    return {
+        "k": P((n_pages, page_size, KV, hd), (None, None, "kv", None),
+               "zeros", dtype=dt),
+        "v": P((n_pages, page_size, KV, hd), (None, None, "kv", None),
+               "zeros", dtype=dt),
+    }
+
+
+def block_decode_paged(x, p, cache, page_table, positions, valid,
+                       kv_len, cfg: ModelConfig, ctx: ParallelCtx,
+                       moe_layer: bool = False, norm_kind: str = "rms"):
+    """Chunk decode against a block-paged KV pool (page-table writes).
+
+    The paged generalization of :func:`block_decode`'s ring write: token
+    ``i`` of slot ``b`` lands in pool page ``page_table[b, pos // PS]``
+    at offset ``pos % PS``, and the slot's cache view is gathered back
+    through the same table.  Handles both the continuous decode step
+    (S=1, all slots) and a chunked-prefill step (S=chunk, one slot).
+
+    x: [B, S, D]; cache: {"k","v"} pools [NP, PS, KV, hd]; page_table:
+    [B, P] int32 pool indices; positions: [B, S] absolute token
+    positions; valid: [B, S] bool (False tokens write to the scratch
+    page and their outputs are ignored); kv_len: [B] int32 valid cache
+    tokens per slot *after* this chunk's writes.
+    """
+    from repro.models.layers import chunk_cache_attention, decode_attention
+
+    acfg = cfg.approx
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    PS = cache["k"].shape[1]
+    Pp = page_table.shape[1]
+    C = Pp * PS
+
+    h = apply_norm(x, p["ln1"], cfg, norm_kind)
+    q = dense(h, p["attn"]["wq"], acfg, "attn_proj").reshape(B, S, H, hd)
+    k = dense(h, p["attn"]["wk"], acfg, "attn_proj").reshape(B, S, KV, hd)
+    v = dense(h, p["attn"]["wv"], acfg, "attn_proj").reshape(B, S, KV, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    # page-table indirection write; invalid tokens go to the scratch
+    # page (0), whose contents are never addressed by any page table
+    pidx = jnp.clip(positions // PS, 0, Pp - 1)           # [B, S]
+    pid = jnp.take_along_axis(page_table, pidx, axis=1)   # [B, S]
+    pid = jnp.where(valid, pid, 0).reshape(-1)
+    poff = (positions % PS).reshape(-1)
+    ck = cache["k"].at[pid, poff].set(
+        k.reshape(B * S, KV, hd).astype(cache["k"].dtype))
+    cv = cache["v"].at[pid, poff].set(
+        v.reshape(B * S, KV, hd).astype(cache["v"].dtype))
+
+    # gather the slot views back through the table: [B, P*PS, KV, hd]
+    kg = ck[page_table].reshape(B, C, KV, hd)
+    vg = cv[page_table].reshape(B, C, KV, hd)
+    j = jnp.arange(C, dtype=jnp.int32)
+    kv_pos = jnp.where(j[None, :] < kv_len[:, None], j[None, :],
+                       jnp.iinfo(jnp.int32).max)          # [B, C]
+
+    if S == 1:
+        # the hot path: same formulation as the dense decode step, so a
+        # paged slot's logits are bit-identical to a lockstep slot's
+        attn_out = decode_attention(
+            q[:, 0], kg, vg, kv_pos, positions[:, 0], cfg.sliding_window,
+            acfg, ctx)[:, None]
+    else:
+        attn_out = chunk_cache_attention(
+            q, kg, vg, positions, kv_pos, cfg.sliding_window, acfg)
+    x = dense(attn_out, p["attn"]["wo"], acfg, "attn_proj",
+              residual=x)
+    h2 = apply_norm(x, p["ln2"], cfg, norm_kind)
+    x = _ffn(h2, p, cfg, ctx, moe_layer, residual=x)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return x, new_cache
 
 
 def block_decode(x, p, cache, slot_positions, pos, cfg: ModelConfig,

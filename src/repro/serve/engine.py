@@ -49,41 +49,57 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.ctx, self.cache_n))
 
-    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
+    def _sample(self, logits: jnp.ndarray, step: int) -> jnp.ndarray:
+        """Sample the whole batch's next tokens (draw index ``step``).
+
+        Per-request keys: request ``i``'s k-th draw uses
+        ``fold_in(fold_in(root, i), k)`` — the root key is only ever
+        folded, no key is used twice, and a request's sampled tokens
+        do not depend on which requests co-reside in the batch.
+        """
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            rng, logits / self.temperature, axis=-1).astype(jnp.int32)
+        root = jax.random.PRNGKey(self.seed)
+        rows = [
+            jax.random.categorical(
+                jax.random.fold_in(jax.random.fold_in(root, i), step),
+                logits[i] / self.temperature)
+            for i in range(logits.shape[0])
+        ]
+        return jnp.stack(rows).astype(jnp.int32)
 
     def generate(self, prompts: List[List[int]], max_new: int = 32,
                  stop_token: Optional[int] = None) -> List[List[int]]:
-        """Pad prompts to a common length, prefill, decode max_new tokens."""
+        """Pad prompts to a common length, prefill, decode max_new tokens.
+
+        A sampled ``stop_token`` terminates its request *without being
+        emitted*: outputs never contain the stop token.
+        """
         B = len(prompts)
         plen = max(len(p) for p in prompts)
-        assert plen + max_new <= self.cache_n, "cache too small"
+        if plen + max_new > self.cache_n:
+            raise ValueError(
+                f"longest prompt ({plen} tokens) + max_new ({max_new}) = "
+                f"{plen + max_new} exceeds cache_n ({self.cache_n})")
         toks = np.zeros((B, plen), np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p  # left-pad (uniform positions)
         batch = {"tokens": jnp.asarray(toks)}
         logits, cache = self._prefill(self.params, batch)
 
-        # split before the *first* sample too: sampling with the root key
-        # and then splitting that same key inside the loop reuses it
-        rng = jax.random.PRNGKey(self.seed)
         out = [[] for _ in range(B)]
         done = np.zeros(B, bool)
-        rng, sub = jax.random.split(rng)
-        tok = self._sample(logits, sub)
+        tok = self._sample(logits, 0)
         for step in range(max_new):
             t = np.asarray(tok)
             for i in range(B):
                 if not done[i]:
-                    out[i].append(int(t[i]))
                     if stop_token is not None and t[i] == stop_token:
                         done[i] = True
-            if done.all():
+                    else:
+                        out[i].append(int(t[i]))
+            if done.all() or step == max_new - 1:
                 break
-            rng, sub = jax.random.split(rng)
             logits, cache = self._decode(self.params, tok, cache)
-            tok = self._sample(logits, sub)
+            tok = self._sample(logits, step + 1)
         return out
