@@ -136,3 +136,43 @@ for ev in eng.stream([[5, 6, 7], [8, 9], [10, 11, 12, 13]], max_new=4):
     print(f"  rid={ev.rid} token={ev.token} done={ev.done}")
 print("decode compiled", eng.trace_counts["decode"], "time(s); pages free:",
       eng.alloc.n_free, "/", eng.geom.usable_pages)
+
+# --- auditing approximate-dispatch coverage ------------------------------
+# The paper's end-to-end numbers assume the approximate units replaced
+# *every* multiply/divide in the datapath — one raw `/` or `@` silently
+# reverts a site to exact arithmetic.  repro.analysis proves coverage
+# in two layers:
+#
+#   PYTHONPATH=src python -m repro.analysis.lint         # layer 1 (fast)
+#   PYTHONPATH=src python -m repro.analysis.jaxpr_audit  # layer 2 (traces)
+#   PYTHONPATH=src python -m repro.analysis \
+#       --baseline AUDIT_baseline.json --json report.json   # both + ratchet
+#
+# Layer 1 is an AST lint (rules RPD001-RPD004: raw matmul/div in
+# models/apps/serve/train, LUT re-baking under jit, literal backend
+# strings — `python -m repro.analysis.lint --list-rules`).  Layer 2
+# traces every entry point (forward, decode, paged decode, trainstep,
+# each app) and censuses the jaxpr: registry-dispatched ops are
+# log-domain (bitcast + integer add + LUT gather) and so emit ZERO
+# dot_general/div primitives — any such primitive whose innermost user
+# frame is outside core/+kernels/ is an escape.  It also flags retrace
+# hazards (unhashable config leaves) and duplicated baked-in LUTs.
+#
+# A genuinely-exact site is declared, with a mandatory reason:
+#
+#     return acc / l[..., None]  # audit: exact — the exact-softmax arm
+#
+# Everything else lives in AUDIT_baseline.json: a *ratchet* — new
+# escapes fail CI (the `audit` job, on both jax pins), known ones are
+# allowlisted for burn-down, entries you fixed warn as stale.  After an
+# intentional change, regenerate with
+# `PYTHONPATH=src python -m repro.analysis --json AUDIT_baseline.json`
+# and review the diff like code.  Operators get the same thing plus an
+# optional compiled-HLO cross-check via `python -m repro.launch.audit
+# --hlo dumped.txt`.
+from repro.analysis import RULES
+from repro.core.backend import dispatch_signature, registered_sites
+
+print("\naudit rules:", ", ".join(sorted(RULES)))
+print("dispatch sites:", registered_sites())
+print("jnp backend div family ->", dispatch_signature("jnp")["div"])

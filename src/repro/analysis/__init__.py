@@ -1,0 +1,25 @@
+"""Static-analysis subsystem proving RAPID dispatch coverage.
+
+Two layers over one report format (``findings.Finding`` + the ratchet
+in ``findings.compare``):
+
+* ``repro.analysis.rules`` / ``repro.analysis.lint`` — AST rules
+  (RPD001..RPD004) over the package source; milliseconds, no jax.
+* ``repro.analysis.jaxpr_audit`` — traces the registered entry points
+  (model forward/decode/decode_paged, trainstep, each app core) and
+  censuses ``dot_general`` / ``div`` primitives that escape the
+  registry-dispatched paths, plus retrace hazards and duplicated
+  large constants.
+
+``python -m repro.analysis`` runs both layers and ratchets against the
+committed ``AUDIT_baseline.json`` (see that file and the quickstart's
+"auditing approximate-dispatch coverage" section).
+"""
+from repro.analysis.findings import (  # noqa: F401
+    CompareResult,
+    Finding,
+    compare,
+    dump_report,
+    load_baseline,
+)
+from repro.analysis.rules import RULES  # noqa: F401

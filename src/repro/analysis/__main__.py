@@ -1,0 +1,89 @@
+"""Combined two-layer audit runner (what the CI ``audit`` job executes).
+
+    PYTHONPATH=src python -m repro.analysis \
+        --baseline AUDIT_baseline.json --json AUDIT_PR.json
+
+Runs the AST lint and the jaxpr entry-point audit, merges both into one
+JSON report, and ratchets against the committed baseline: allowlisted
+findings pass, new escapes exit 1 (with file:line for AST findings and
+entry/primitive for jaxpr escapes), stale allowlist entries warn.
+
+Regenerating the allowlist after an intentional change is the same
+command with the report written *as* the baseline:
+
+    PYTHONPATH=src python -m repro.analysis --json AUDIT_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis import findings as F
+from repro.analysis import jaxpr_audit, lint
+
+
+def run_combined(entries: Optional[List[str]] = None,
+                 baseline: Optional[str] = None,
+                 json_path: Optional[str] = None):
+    """Both layers + ratchet + report; returns (rc, findings, jaxpr_meta).
+
+    The programmatic face of ``python -m repro.analysis``, also driven
+    by the operator CLI in :mod:`repro.launch.audit`.
+    """
+    ast_findings = lint.run_lint()
+    jaxpr_findings, meta = jaxpr_audit.run_audit(entries)
+    current = ast_findings + jaxpr_findings
+
+    print(f"ast lint: {len(ast_findings)} finding(s); "
+          f"jaxpr audit: {sum(f.count for f in jaxpr_findings)} escaped "
+          f"eqn(s) across {len(meta)} entries")
+    jaxpr_audit.print_meta(meta)
+
+    result = None
+    if baseline:
+        result = F.compare(current, F.load_baseline(baseline))
+        for f in result.new:
+            print(f"NEW: {f.where()}: [{f.rule}] {f.msg}")
+            if f.code:
+                print(f"    {f.code}")
+        for w in result.warnings:
+            print(f"warning: {w}")
+        print(f"ratchet vs {baseline}: {result.summary()}")
+        ok = result.ok
+    else:
+        lint.print_findings(current)
+        ok = not current
+
+    if json_path:
+        F.dump_report(json_path, ast_findings, jaxpr_findings,
+                      jaxpr_meta=meta, result=result)
+        print(f"report written to {json_path}")
+
+    if not ok:
+        print("FAIL: new registry escapes (route through qmatmul/qdiv/"
+              "qsoftmax_div/qrms_div, mark '# audit: exact — reason', or "
+              "regenerate the baseline if intentional)", file=sys.stderr)
+    return (0 if ok else 1), current, meta
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="RAPID dispatch-coverage audit (AST lint + jaxpr "
+                    "entry-point census)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the merged two-layer JSON report")
+    ap.add_argument("--baseline", default="", metavar="PATH",
+                    help="ratchet against this committed baseline")
+    ap.add_argument("--entries", default="",
+                    help="comma-separated jaxpr entry subset (default all)")
+    args = ap.parse_args(argv)
+    rc, _, _ = run_combined(
+        entries=[n for n in args.entries.split(",") if n] or None,
+        baseline=args.baseline or None, json_path=args.json or None)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,475 @@
+"""Layer-2 audit: trace entry points and census registry escapes.
+
+The AST lint (layer 1) reads source; this layer reads what jax will
+actually execute.  Key fact the census exploits: the approximate
+registry ops are *log-domain* — bitcast + integer add + LUT gather —
+so a registry-dispatched multiply/divide contains **zero**
+``dot_general`` / ``div`` primitives.  Every ``dot_general``/``div``
+equation left in a traced entry point is therefore either
+
+  * **accounted** — its innermost user frame sits under
+    ``repro/core/`` or ``repro/kernels/`` (the declared-exact qmatmul
+    path, ``exact_einsum``, the kernels' oracles), or
+  * an **escape** — exact arithmetic reached from model/app/serve/train
+    code without going through the registry, reported per
+    ``(entry, primitive, file)`` and ratcheted against
+    ``AUDIT_baseline.json``.
+
+On top of the census the auditor flags two trace-hygiene hazards:
+
+  * **retrace hazards** — unhashable leaves inside an entry's static
+    config (a config that cannot ride jit static args silently retraces
+    per call);
+  * **duplicated large constants** — two identical >=256-element consts
+    baked into one closed jaxpr (the signature of a LUT rebuilt per call
+    site instead of the memoized ``mitchell.lut_host`` table).
+
+Run ``python -m repro.analysis.jaxpr_audit`` (slow: traces every entry)
+or the combined ``python -m repro.analysis``.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import sys
+import sysconfig
+from collections import OrderedDict
+from dataclasses import fields as dataclass_fields, is_dataclass
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import UNATTRIBUTED, CompareResult, Finding
+from repro.analysis import findings as F
+
+__all__ = [
+    "AUDITED_PRIMITIVES",
+    "ACCOUNTED_PREFIXES",
+    "ENTRIES",
+    "iter_eqns",
+    "audit_fn",
+    "run_audit",
+    "duplicate_consts",
+    "unhashable_leaves",
+]
+
+#: primitives that must not appear outside registry-accounted frames
+AUDITED_PRIMITIVES = ("dot_general", "div")
+
+#: repo-relative prefixes whose dot/div eqns are registry-accounted
+ACCOUNTED_PREFIXES = ("src/repro/core/", "src/repro/kernels/")
+
+_DUP_CONST_MIN_SIZE = 256
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking (shared idiom with launch/hlo_analysis: one flat iterator
+# over nested instruction containers)
+# --------------------------------------------------------------------------
+
+def _sub_jaxprs(params: dict):
+    """Inner jaxprs hiding in an eqn's params (pjit/scan/custom_vjp/...).
+
+    Duck-typed: ``isinstance`` against ``jax.core.Jaxpr`` misses
+    reexported/closed variants across jax versions, but every container
+    either has ``.eqns`` (a Jaxpr) or wraps one as ``.jaxpr``
+    (a ClosedJaxpr).
+    """
+    for v in params.values():
+        items = v if isinstance(v, (list, tuple)) else (v,)
+        for x in items:
+            if hasattr(x, "eqns"):
+                yield x
+            elif hasattr(x, "jaxpr") and hasattr(x.jaxpr, "eqns"):
+                yield x.jaxpr
+
+
+def iter_eqns(jaxpr):
+    """Depth-first over every eqn, descending into sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+# --------------------------------------------------------------------------
+# source attribution
+# --------------------------------------------------------------------------
+
+_STDLIB = sysconfig.get_paths().get("stdlib", "") or "\x00"
+
+
+def _is_user_file(fname: str) -> bool:
+    if not fname:
+        return False
+    if "site-packages" in fname or "/jax/" in fname or "/jaxlib/" in fname:
+        return False
+    if fname.startswith(_STDLIB):
+        return False
+    for prefix in (sys.prefix, sys.base_prefix):
+        if prefix and fname.startswith(prefix) and "repro" not in fname:
+            return False
+    return True
+
+
+def _frame_file_line(fr) -> Tuple[str, int]:
+    fname = getattr(fr, "file_name", None) or getattr(fr, "filename", "") or ""
+    line = (getattr(fr, "start_line", None) or getattr(fr, "line_num", None)
+            or getattr(fr, "lineno", None) or 0)
+    return fname, int(line)
+
+
+def _eqn_frames(eqn):
+    """User frames for an eqn, innermost first; [] if source info is gone."""
+    si = getattr(eqn, "source_info", None)
+    if si is None:
+        return []
+    frames = None
+    try:
+        from jax._src import source_info_util as siu
+        frames = list(siu.user_frames(si))
+    except Exception:
+        tb = getattr(si, "traceback", None)
+        frames = list(getattr(tb, "frames", ()) or ()) if tb is not None else []
+    out = []
+    for fr in frames:
+        fname, line = _frame_file_line(fr)
+        if _is_user_file(fname):
+            out.append((fname, line))
+    return out
+
+
+def _rel_repro(fname: str) -> Optional[str]:
+    """Absolute frame path -> committed-baseline path (src/repro/...)."""
+    parts = Path(fname).parts
+    if "repro" in parts:
+        i = parts.index("repro")
+        return "/".join(("src",) + parts[i:])
+    # non-package user code (tests, scripts): best-effort basename anchor
+    for anchor in ("tests", "benchmarks", "examples"):
+        if anchor in parts:
+            return "/".join(parts[parts.index(anchor):])
+    return None
+
+
+def attribute_eqn(eqn) -> Tuple[str, int]:
+    """(repo-relative file, line) of an eqn's innermost user frame."""
+    for fname, line in _eqn_frames(eqn):
+        rel = _rel_repro(fname)
+        if rel is not None:
+            return rel, line
+    return UNATTRIBUTED, 0
+
+
+# --------------------------------------------------------------------------
+# escape census + hazards for one traced function
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _markers_for(rel_file: str) -> dict:
+    """line -> '# audit: exact' reason for one committed source file.
+
+    The jaxpr layer honors the same marker contract as the AST lint: a
+    dot/div whose attributed line carries a reasoned marker is declared
+    exact, not an escape.  Resolved against the repo this package runs
+    from; unreadable files (installed wheel, moved tree) yield {}.
+    """
+    from repro.analysis.rules import _marker_lines
+
+    root = Path(__file__).resolve().parents[3]
+    try:
+        source = (root / rel_file).read_text()
+    except OSError:
+        return {}
+    return {ln: r for ln, r in _marker_lines(source).items() if r}
+
+
+def census(closed, entry: str) -> List[Finding]:
+    """Escape findings for one closed jaxpr (aggregated per key)."""
+    hits: "OrderedDict[Tuple[str, str], List[int]]" = OrderedDict()
+    for eqn in iter_eqns(closed.jaxpr):
+        prim = eqn.primitive.name
+        if prim not in AUDITED_PRIMITIVES:
+            continue
+        file, line = attribute_eqn(eqn)
+        if file != UNATTRIBUTED:
+            if file.startswith(ACCOUNTED_PREFIXES):
+                continue
+            if line in _markers_for(file):
+                continue  # declared '# audit: exact — reason' at the site
+        key = (prim, file)
+        if key in hits:
+            hits[key][0] += 1
+        else:
+            hits[key] = [1, line]
+    out = []
+    for (prim, file), (count, line) in hits.items():
+        out.append(Finding(
+            layer="jaxpr", rule="escape", file=file, line=line,
+            msg=f"{prim} outside registry-accounted frames "
+                f"(x{count} in entry {entry!r})",
+            entry=entry, primitive=prim, count=count))
+    return out
+
+
+def duplicate_consts(closed, min_size: int = _DUP_CONST_MIN_SIZE
+                     ) -> List[str]:
+    """Identical large consts baked in twice (per-call-site LUT rebuild)."""
+    seen: Dict[Tuple[str, tuple, str], int] = {}
+    for c in closed.consts:
+        try:
+            arr = np.asarray(c)
+        except Exception:
+            continue
+        if arr.size < min_size:
+            continue
+        key = (str(arr.dtype), tuple(arr.shape),
+               hashlib.sha1(arr.tobytes()).hexdigest())
+        seen[key] = seen.get(key, 0) + 1
+    return [f"const {shape} {dtype} baked in {n}x (duplicated LUT? "
+            f"hoist through mitchell.lut_host/lut_device)"
+            for (dtype, shape, _), n in seen.items() if n > 1]
+
+
+def unhashable_leaves(obj, path: str = "cfg") -> List[str]:
+    """Paths of unhashable leaves in a static-config object tree.
+
+    An entry's config rides jit static args / custom_vjp nondiff
+    positions; one unhashable leaf means silent retrace-per-call.
+    """
+    try:
+        hash(obj)
+        return []
+    except TypeError:
+        pass
+    out: List[str] = []
+    if is_dataclass(obj) and not isinstance(obj, type):
+        for f in dataclass_fields(obj):
+            out += unhashable_leaves(getattr(obj, f.name), f"{path}.{f.name}")
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            out += unhashable_leaves(v, f"{path}[{k!r}]")
+    elif isinstance(obj, (list, tuple, set)):
+        for i, v in enumerate(obj):
+            out += unhashable_leaves(v, f"{path}[{i}]")
+    else:
+        out.append(f"{path}: unhashable {type(obj).__name__}")
+    # a container whose members all hash individually is itself the leaf
+    # (e.g. a dict: members fine, dict not) — report the container once
+    return out or [f"{path}: unhashable {type(obj).__name__}"]
+
+
+def audit_fn(fn: Callable, args: tuple, entry: str,
+             static_config=None) -> Tuple[List[Finding], dict]:
+    """Trace ``fn(*args)`` and return (escape findings, meta dict)."""
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args)
+    findings = census(closed, entry)
+    n_audited = sum(1 for e in iter_eqns(closed.jaxpr)
+                    if e.primitive.name in AUDITED_PRIMITIVES)
+    meta = {
+        "eqns_audited": n_audited,
+        "escapes": int(sum(f.count for f in findings)),
+        "dup_consts": duplicate_consts(closed),
+        "retrace_hazards": (unhashable_leaves(static_config)
+                            if static_config is not None else []),
+    }
+    return findings, meta
+
+
+# --------------------------------------------------------------------------
+# entry-point registry: name -> builder returning (fn, args, static_cfg).
+# Builders run on CPU with reduced configs; tracing is abstract so the
+# concrete argument values never matter, only shapes/dtypes.
+# --------------------------------------------------------------------------
+
+def _model_setup(arch: str):
+    import jax
+
+    from repro.configs.base import RAPID, get_config
+    from repro.models.layers import ParallelCtx
+    from repro.models.model import Model
+
+    cfg = get_config(arch).reduced().with_(approx=RAPID)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, cfg, params, ParallelCtx()
+
+
+def _batch_for(cfg, B: int = 2, S: int = 8) -> dict:
+    import jax
+
+    rng = jax.random.PRNGKey(0)
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S], "targets": toks[:, 1:]}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.numpy.zeros((B, cfg.frontend_seq, 1024))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.numpy.zeros((B, cfg.frontend_seq, 1024))
+    return batch
+
+
+def _entry_model_forward():
+    m, cfg, params, ctx = _model_setup("yi_6b")
+    batch = _batch_for(cfg)
+    return (lambda p, b: m.forward(p, b, ctx)), (params, batch), cfg
+
+
+def _entry_model_forward_moe():
+    m, cfg, params, ctx = _model_setup("qwen3_moe_235b_a22b")
+    batch = _batch_for(cfg)
+    return (lambda p, b: m.forward(p, b, ctx)), (params, batch), cfg
+
+
+def _entry_model_decode():
+    import jax.numpy as jnp
+
+    m, cfg, params, ctx = _model_setup("yi_6b")
+    cache = m.init_cache(2, 16)
+    tokens = jnp.zeros((2,), jnp.int32)
+    return (lambda p, t, c: m.decode_step(p, t, c, ctx)), \
+        (params, tokens, cache), cfg
+
+
+def _entry_model_decode_paged():
+    import jax.numpy as jnp
+
+    m, cfg, params, ctx = _model_setup("yi_6b")
+    cache = m.init_paged_cache(n_pages=4, page_size=8)
+    tokens = jnp.zeros((2, 4), jnp.int32)
+    page_table = jnp.zeros((2, 2), jnp.int32)
+    offsets = jnp.zeros((2,), jnp.int32)
+    n_valid = jnp.full((2,), 4, jnp.int32)
+    fn = lambda p, t, c, pt, off, nv: m.decode_paged(  # noqa: E731
+        p, t, c, pt, off, nv, ctx)
+    return fn, (params, tokens, cache, page_table, offsets, n_valid), cfg
+
+
+def _entry_trainstep():
+    import jax.numpy as jnp
+
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainstep import make_train_step
+
+    m, cfg, params, ctx = _model_setup("yi_6b")
+    init_opt, step = make_train_step(m, OptConfig(lr=1e-3), ctx)
+    opt = init_opt(params)
+    batch = _batch_for(cfg)
+    return (lambda p, o, b: step(p, o, b, jnp.int32(0))), \
+        (params, opt, batch), cfg
+
+
+def _entry_app_jpeg():
+    import jax.numpy as jnp
+
+    from repro.apps.arith import VARIANTS
+    from repro.apps.jpeg import QTABLE, roundtrip_blocks
+
+    v = VARIANTS["rapid"]
+    blocks = jnp.zeros((16, 8, 8), jnp.float32)
+    q = jnp.asarray(QTABLE)
+    return (lambda b, qt: roundtrip_blocks(b, v, qt)), (blocks, q), v
+
+
+def _entry_app_harris():
+    import jax.numpy as jnp
+
+    from repro.apps.arith import VARIANTS
+    from repro.apps.harris import harris_response
+
+    v = VARIANTS["rapid"]
+    g = jnp.zeros((32, 32), jnp.float32)
+    return (lambda gx, gy: harris_response(gx, gy, v)), (g, g), v
+
+
+def _entry_app_pan_tompkins():
+    import jax.numpy as jnp
+
+    from repro.apps.arith import VARIANTS
+    from repro.apps.pan_tompkins import integrate_energy
+
+    v = VARIANTS["rapid"]
+    der = jnp.zeros((256,), jnp.float32)
+    return (lambda d: integrate_energy(d, v)), (der,), v
+
+
+ENTRIES: Dict[str, Callable] = {
+    "model_forward": _entry_model_forward,
+    "model_forward_moe": _entry_model_forward_moe,
+    "model_decode": _entry_model_decode,
+    "model_decode_paged": _entry_model_decode_paged,
+    "trainstep": _entry_trainstep,
+    "app_jpeg": _entry_app_jpeg,
+    "app_harris": _entry_app_harris,
+    "app_pan_tompkins": _entry_app_pan_tompkins,
+}
+
+
+def run_audit(names: Optional[List[str]] = None
+              ) -> Tuple[List[Finding], dict]:
+    """Trace every registered entry; returns (findings, per-entry meta)."""
+    findings: List[Finding] = []
+    meta: dict = {}
+    for name in (names or list(ENTRIES)):
+        fn, args, static_cfg = ENTRIES[name]()
+        got, m = audit_fn(fn, args, name, static_config=static_cfg)
+        findings += got
+        meta[name] = m
+    return findings, meta
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def print_meta(meta: dict, stream=sys.stdout) -> None:
+    for name, m in meta.items():
+        stream.write(
+            f"{name}: {m['eqns_audited']} dot/div eqns, "
+            f"{m['escapes']} escaped\n")
+        for w in m.get("dup_consts", []):
+            stream.write(f"  warning: {w}\n")
+        for w in m.get("retrace_hazards", []):
+            stream.write(f"  warning: retrace hazard: {w}\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.jaxpr_audit",
+        description="trace entry points; census dot/div registry escapes")
+    ap.add_argument("--entries", default="",
+                    help=f"comma-separated subset of {sorted(ENTRIES)}")
+    ap.add_argument("--json", default="", metavar="PATH")
+    ap.add_argument("--baseline", default="", metavar="PATH")
+    args = ap.parse_args(argv)
+
+    names = [n for n in args.entries.split(",") if n] or None
+    findings, meta = run_audit(names)
+    print_meta(meta)
+    result: Optional[CompareResult] = None
+    if args.baseline:
+        baseline = [f for f in F.load_baseline(args.baseline)
+                    if f.layer == "jaxpr"]
+        result = F.compare(findings, baseline)
+        for f in result.new:
+            print(f"NEW escape: {f.where()}: {f.msg}")
+        for w in result.warnings:
+            print(f"warning: {w}")
+        print(f"jaxpr ratchet: {result.summary()}")
+        ok = result.ok
+    else:
+        for f in findings:
+            print(f"{f.where()}: {f.msg}")
+        ok = not findings
+
+    if args.json:
+        F.dump_report(args.json, [], findings, jaxpr_meta=meta,
+                      result=result)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Layer-1 CLI: AST lint over ``src/repro``.
+
+    PYTHONPATH=src python -m repro.analysis.lint [--root src/repro]
+        [--json out.json] [--baseline AUDIT_baseline.json] [--list-rules]
+
+Without ``--baseline`` every finding is printed and a nonzero count
+exits 1 (useful while burning the allowlist down to zero).  With
+``--baseline`` the ratchet applies: allowlisted findings pass, new ones
+fail with ``file:line``.  The combined two-layer runner
+(``python -m repro.analysis``) is what CI uses; this entry point exists
+for fast local iteration (no jax import, runs in milliseconds).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import findings as F
+from repro.analysis import rules
+
+
+def _default_root() -> Path:
+    # the package dir this module lives in: .../src/repro
+    return Path(__file__).resolve().parent.parent
+
+
+def run_lint(root: Optional[Path] = None) -> List[F.Finding]:
+    return rules.collect(root or _default_root())
+
+
+def print_findings(items: List[F.Finding], stream=sys.stdout) -> None:
+    for f in sorted(items, key=lambda f: (f.file, f.line, f.rule)):
+        stream.write(f"{f.where()}: {f.rule} {f.msg}\n")
+        if f.code:
+            stream.write(f"    {f.code}\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="RAPID dispatch-coverage AST lint (RPD rules)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="package dir to lint (default: the installed "
+                         "repro package)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write findings as a JSON report")
+    ap.add_argument("--baseline", default="", metavar="PATH",
+                    help="ratchet against a committed baseline instead of "
+                         "failing on any finding")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in rules.RULES.items():
+            print(f"{rule}  {desc}")
+        return 0
+
+    found = run_lint(args.root)
+    result: Optional[F.CompareResult] = None
+    if args.baseline:
+        baseline = [f for f in F.load_baseline(args.baseline)
+                    if f.layer == "ast"]
+        result = F.compare(found, baseline)
+        print_findings(result.new)
+        for w in result.warnings:
+            print(f"warning: {w}")
+        print(f"lint ratchet: {result.summary()}")
+        ok = result.ok
+    else:
+        print_findings(found)
+        print(f"{len(found)} finding(s)")
+        ok = not found
+
+    if args.json:
+        F.dump_report(args.json, found, [], result=result)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

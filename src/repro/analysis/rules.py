@@ -1,0 +1,275 @@
+"""Custom AST lint rules proving mul/div route through the RAPID registry.
+
+The paper's end-to-end claim requires the approximate units to be
+substituted in *every* kernel — a single raw ``/`` or ``@`` silently
+reverts one site to exact arithmetic and over-reports the QoR/perf
+tradeoff.  These rules make that class of rot visible:
+
+  RPD001  raw matmul (``jnp.dot`` / ``@`` / ``jnp.einsum`` /
+          ``lax.dot_general`` / ``jnp.matmul`` / ``jnp.tensordot`` /
+          ``jnp.vdot``) outside ``core/`` + ``kernels/`` — model and
+          app contractions must go through ``qmatmul`` /
+          ``qmatmul_batched`` / the declared-exact ``exact_einsum``;
+  RPD002  raw true-division in ``models/``, ``apps/``, ``serve/``,
+          ``train/`` — divides must go through ``qdiv`` /
+          ``qsoftmax_div`` / ``qrms_div`` or carry an explicit
+          ``# audit: exact`` marker with a reason;
+  RPD003  LUT construction (``mitchell.lut_host`` / ``lut_device`` /
+          ``mul_lut_device`` / ``div_lut_device``) inside a jitted
+          function body — re-baking the table per trace defeats the
+          per-(scheme, dtype) memoization and bloats every executable;
+  RPD004  literal backend strings (``backend="pallas"`` etc.) at call
+          sites instead of ``ApproxConfig.backend_for(site)`` — a
+          hard-coded name bypasses per-site routing and env/CI pinning.
+
+Marker contract: ``# audit: exact — <reason>`` on the flagged line (or
+as a standalone comment on the line above) suppresses RPD rules for
+that line.  The reason is mandatory — a bare marker does not suppress
+(the finding's message says why).  Suppressed-with-reason escapes are
+the *declared-exact* arms (accurate reference variants, host-side
+constant math); everything else goes in ``AUDIT_baseline.json`` and is
+burned down over time.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "RULES",
+    "MARKER_RE",
+    "lint_source",
+    "lint_file",
+    "collect",
+    "zone_of",
+]
+
+# rule id -> one-line description (the CLI prints this table)
+RULES = {
+    "RPD001": "raw matmul outside core/+kernels/ (use qmatmul/exact_einsum)",
+    "RPD002": "raw true-division on arrays (use qdiv/qsoftmax_div/qrms_div "
+              "or '# audit: exact — reason')",
+    "RPD003": "LUT construction inside a jitted function (memoize via "
+              "mitchell.lut_host/lut_device at trace-constant level)",
+    "RPD004": "literal backend string at a call site (use "
+              "ApproxConfig.backend_for(site))",
+}
+
+# package sub-dirs (zones) each rule applies to; None = every zone
+_MATMUL_EXEMPT = {"core", "kernels", "analysis"}
+_DIV_ZONES = {"models", "apps", "serve", "train"}
+_BACKEND_ZONES = {"models", "apps", "serve", "train"}
+
+_MATMUL_ATTRS = {"dot", "matmul", "einsum", "tensordot", "vdot",
+                 "dot_general"}
+_MATMUL_ROOTS = {"jnp", "jax", "lax"}
+_LUT_FNS = {"lut_host", "lut_device", "mul_lut_device", "div_lut_device"}
+_BACKEND_NAMES = {"jnp", "pallas", "pallas-interpret"}
+
+MARKER_RE = re.compile(r"#\s*audit:\s*exact\b\s*[—\-–:(]*\s*(?P<reason>.*)")
+
+
+def zone_of(rel: Path) -> str:
+    """First package sub-dir of a path relative to the package root
+    (``src/repro``); top-level modules (compat.py) map to ``<top>``."""
+    parts = rel.parts
+    return parts[0] if len(parts) > 1 else "<top>"
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.dot_general' for an Attribute/Name chain ('' otherwise)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_const_expr(node: ast.AST) -> bool:
+    """Literal-only arithmetic (``2 * 3.0``, ``-1.0``): never a traced
+    array, so RPD002 skips it."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float, complex))
+    if isinstance(node, ast.UnaryOp):
+        return _is_const_expr(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_const_expr(node.left) and _is_const_expr(node.right)
+    return False
+
+
+def _marker_lines(source: str) -> Dict[int, str]:
+    """line -> marker reason ('' = marker present but reason missing).
+
+    A marker on a code line covers that line; a standalone comment line
+    covers the next line (so a long expression can carry the marker just
+    above).  Uses tokenize so strings containing '# audit:' don't count.
+    """
+    markers: Dict[int, str] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return markers
+    code_lines: Set[int] = set()
+    for tok in tokens:
+        if tok.type in (tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+                        tokenize.INDENT, tokenize.DEDENT,
+                        tokenize.ENDMARKER):
+            continue
+        for ln in range(tok.start[0], tok.end[0] + 1):
+            code_lines.add(ln)
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = MARKER_RE.search(tok.string)
+        if not m:
+            continue
+        reason = m.group("reason").strip().strip(")").strip()
+        ln = tok.start[0]
+        target = ln if ln in code_lines else ln + 1
+        markers[target] = reason
+    return markers
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, file: str, zone: str, lines: List[str]):
+        self.file = file
+        self.zone = zone
+        self.lines = lines
+        self.findings: List[Finding] = []
+        self._jit_depth = 0
+
+    # -- helpers ----------------------------------------------------------
+    def _code(self, node: ast.AST) -> str:
+        ln = getattr(node, "lineno", 0)
+        return self.lines[ln - 1].strip() if 0 < ln <= len(self.lines) else ""
+
+    def _emit(self, rule: str, node: ast.AST, msg: str):
+        self.findings.append(Finding(
+            layer="ast", rule=rule, file=self.file,
+            line=getattr(node, "lineno", 0), msg=msg, code=self._code(node)))
+
+    # -- RPD003 jit-context tracking --------------------------------------
+    def _decorated_jit(self, node) -> bool:
+        for dec in node.decorator_list:
+            try:
+                text = ast.unparse(dec)
+            except Exception:  # pragma: no cover - unparse is py3.9+
+                text = ""
+            if re.search(r"\bjit\b", text):
+                return True
+        return False
+
+    def _visit_function(self, node):
+        jitted = self._decorated_jit(node)
+        self._jit_depth += jitted
+        self.generic_visit(node)
+        self._jit_depth -= jitted
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # -- rules -------------------------------------------------------------
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, ast.MatMult) and self.zone not in _MATMUL_EXEMPT:
+            self._emit("RPD001", node,
+                       "raw '@' matmul bypasses the backend registry "
+                       "(route through qmatmul / exact_einsum)")
+        if (isinstance(node.op, ast.Div) and self.zone in _DIV_ZONES
+                and not (_is_const_expr(node.left)
+                         and _is_const_expr(node.right))):
+            self._emit("RPD002", node,
+                       "raw '/' bypasses the RAPID divider (route through "
+                       "qdiv/qsoftmax_div/qrms_div or mark "
+                       "'# audit: exact — reason')")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        root = dotted.split(".")[0] if dotted else ""
+        leaf = dotted.rsplit(".", 1)[-1] if dotted else ""
+
+        if (self.zone not in _MATMUL_EXEMPT and leaf in _MATMUL_ATTRS
+                and root in _MATMUL_ROOTS):
+            self._emit("RPD001", node,
+                       f"raw {dotted}() bypasses the backend registry "
+                       "(route through qmatmul / exact_einsum)")
+        if (self.zone in _DIV_ZONES and root in ("jnp", "jax")
+                and leaf in ("divide", "true_divide")):
+            self._emit("RPD002", node,
+                       f"raw {dotted}() bypasses the RAPID divider")
+        if leaf in _LUT_FNS and self._jit_depth > 0:
+            self._emit("RPD003", node,
+                       f"{leaf}() inside a jitted function re-bakes the "
+                       "LUT on every trace (hoist to trace-constant level)")
+        if self.zone in _BACKEND_ZONES:
+            for kw in node.keywords:
+                if (kw.arg == "backend" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value in _BACKEND_NAMES):
+                    self._emit(
+                        "RPD004", node,
+                        f"literal backend={kw.value.value!r} pins the "
+                        "execution path at the call site (use "
+                        "ApproxConfig.backend_for(site))")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, file: str, zone: str) -> List[Finding]:
+    """Run every rule over one module's source text."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:  # surface as a finding, not a crash
+        return [Finding(layer="ast", rule="RPD000", file=file,
+                        line=e.lineno or 0, msg=f"syntax error: {e.msg}")]
+    lines = source.splitlines()
+    visitor = _Visitor(file, zone, lines)
+    visitor.visit(tree)
+    markers = _marker_lines(source)
+    out: List[Finding] = []
+    for f in visitor.findings:
+        if f.line in markers:
+            if markers[f.line]:
+                continue  # declared exact, with a reason
+            f = Finding(**{**f.__dict__,
+                           "msg": f.msg + " [marker present but missing the "
+                                          "mandatory reason]"})
+        out.append(f)
+    return out
+
+
+def lint_file(path: Path, zone: str, rel_file: Optional[str] = None
+              ) -> List[Finding]:
+    source = path.read_text()
+    return lint_source(source, rel_file or str(path), zone)
+
+
+def collect(root: Path, rel_to: Optional[Path] = None) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (the ``src/repro`` package dir).
+
+    Findings carry paths relative to ``rel_to`` (default: two levels
+    above ``root``, i.e. the repo root, so files read
+    ``src/repro/...`` exactly as the committed baseline records them).
+    """
+    root = Path(root)
+    if rel_to is None:
+        rel_to = root.parent.parent if root.parent.name == "src" else root
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        rel = path.relative_to(root)
+        findings += lint_file(path, zone_of(rel),
+                              str(path.relative_to(rel_to)))
+    return findings
+
+
+def iter_rules() -> Iterable[str]:
+    return iter(RULES)

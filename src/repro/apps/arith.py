@@ -4,6 +4,15 @@ Each app runs under a named ``Variant`` that fixes which multiplier /
 divider implementation every kernel uses — accurate, RAPID, plain
 Mitchell, or the truncated DRUM/AAXD baselines — mirroring the paper's
 end-to-end comparison matrix (SSV-B).
+
+The scheme-routed arms dispatch through the backend registry
+(``repro.core.ops.qdiv`` / ``qmatmul_batched`` with the variant's
+``ApproxConfig.backend_for`` selection), the same mechanism the model
+zoo uses — so ``RAPID_BACKEND=pallas-interpret`` in CI drives the app
+hot loops through the Pallas kernels too, and the dispatch auditor can
+prove coverage.  The ``exact`` arms are the accurate reference pipeline
+and are declared so (``# audit: exact``); the DRUM/AAXD arms are
+truncated-baseline functions outside the log-domain registry families.
 """
 from __future__ import annotations
 
@@ -11,7 +20,9 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
+from repro.configs.base import ApproxConfig
 from repro.core import float_approx as fa
+from repro.core import ops
 from repro.core.truncated import aaxd_div_f32, drum_mul_f32
 
 __all__ = ["Variant", "VARIANTS"]
@@ -22,30 +33,60 @@ class Variant:
     name: str
     mul_kind: str  # exact | scheme name | drum
     div_kind: str  # exact | scheme name | aaxd
+    # backend-registry selection for the scheme-routed arms ("auto" =
+    # env var / process default / hardware, like the models)
+    backends: str = "auto"
+
+    @property
+    def approx(self) -> ApproxConfig:
+        """The variant as the models' config type (registry selection)."""
+        mul = None if self.mul_kind in ("exact", "drum") else self.mul_kind
+        div = None if self.div_kind in ("exact", "aaxd") else self.div_kind
+        return ApproxConfig(mul_scheme=mul, div_scheme=div,
+                            backends=self.backends)
+
+    def _backend(self) -> str:
+        return self.approx.backend_for("default")
 
     def mul(self, a, b):
         if self.mul_kind == "exact":
-            return a * b
+            return a * b  # audit: exact — accurate reference arm
         if self.mul_kind == "drum":
             return drum_mul_f32(a, b)
         return fa.approx_mul(a, b, self.mul_kind)
 
     def div(self, a, b):
         if self.div_kind == "exact":
-            return a / b
+            return a / b  # audit: exact — accurate reference arm
         if self.div_kind == "aaxd":
             return aaxd_div_f32(a, b)
-        return fa.approx_div(a, b, self.div_kind)
+        a, b = jnp.broadcast_arrays(jnp.asarray(a, jnp.float32),
+                                    jnp.asarray(b, jnp.float32))
+        return ops.qdiv(a, b, self.div_kind, backend=self._backend())
 
     def matmul(self, x, w):
-        """Contraction built from the variant's scalar multiplier.
+        """Contraction built from the variant's multiplier.
 
-        x: [..., K]; w: [K, N] -> [..., N].
+        x: [..., K]; w: [K, N] -> [..., N].  Scheme variants route
+        through the registry matmul (``qmatmul``), so the contraction
+        runs the log-domain kernel the selected backend provides.
         """
         if self.mul_kind == "exact":
-            return x @ w
-        prod = self.mul(x[..., :, None], w)  # [..., K, N]
-        return prod.sum(axis=-2)
+            return x @ w  # audit: exact — accurate reference arm
+        if self.mul_kind == "drum":
+            prod = self.mul(x[..., :, None], w)  # [..., K, N]
+            return prod.sum(axis=-2)
+        return ops.qmatmul(x, w, self.mul_kind, backend=self._backend())
+
+    def matmul_batched(self, a, b):
+        """Batched [*B, M, K] x [*B, K, N] through the variant multiplier."""
+        if self.mul_kind == "exact":
+            return a @ b  # audit: exact — accurate reference arm
+        if self.mul_kind == "drum":
+            prod = self.mul(a[..., :, :, None], b[..., None, :, :])
+            return prod.sum(axis=-2)
+        return ops.qmatmul_batched(a, b, self.mul_kind,
+                                   backend=self._backend())
 
 
 VARIANTS = {
@@ -62,4 +103,5 @@ def psnr(ref: jnp.ndarray, test: jnp.ndarray, peak: float) -> float:
                                     - test.astype(jnp.float32))))
     if mse == 0:
         return float("inf")
+    # audit: exact — host-side QoR metric, not an approximated datapath
     return float(10.0 * jnp.log10(peak * peak / mse))

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.apps.arith import VARIANTS, Variant
 
-__all__ = ["synthetic_scene", "harris_corners", "run"]
+__all__ = ["synthetic_scene", "harris_response", "harris_corners", "run"]
 
 
 def synthetic_scene(size: int = 256, seed: int = 0) -> np.ndarray:
@@ -49,9 +49,11 @@ def _window_sum(x: jnp.ndarray, r: int = 2) -> jnp.ndarray:
     return (out[k:, k:] - out[:-k, k:] - out[k:, :-k] + out[:-k, :-k])
 
 
-def harris_corners(img: np.ndarray, variant: Variant, n_max: int = 200):
-    gx, gy = _sobel(img)
-    gxj, gyj = jnp.asarray(gx) / 255.0, jnp.asarray(gy) / 255.0
+def harris_response(gxj: jnp.ndarray, gyj: jnp.ndarray,
+                    variant: Variant) -> jnp.ndarray:
+    """jnp-only Harris core on normalized gradients (the traceable unit
+    the dispatch auditor censuses): products -> window sums -> Noble
+    measure through the variant divider."""
     ixx = variant.mul(gxj, gxj)
     iyy = variant.mul(gyj, gyj)
     ixy = variant.mul(gxj, gyj)
@@ -60,8 +62,14 @@ def harris_corners(img: np.ndarray, variant: Variant, n_max: int = 200):
     sxy = _window_sum(ixy)
     det = variant.mul(sxx, syy) - variant.mul(sxy, sxy)
     trace = sxx + syy
-    resp = variant.div(det, trace + 1e-3)  # Noble measure — the div stage
-    r = np.asarray(resp)
+    return variant.div(det, trace + 1e-3)  # Noble measure — the div stage
+
+
+def harris_corners(img: np.ndarray, variant: Variant, n_max: int = 200):
+    gx, gy = _sobel(img)
+    # audit: exact — fixed-point gradient rescale (a shift on the FPGA)
+    gxj, gyj = jnp.asarray(gx) / 255.0, jnp.asarray(gy) / 255.0
+    r = np.asarray(harris_response(gxj, gyj, variant))
 
     # accurate NMS + top-N selection (comparisons only)
     rp = np.pad(r, 1, mode="constant", constant_values=-np.inf)

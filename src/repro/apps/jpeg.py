@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.apps.arith import VARIANTS, Variant, psnr
 
-__all__ = ["synthetic_aerial", "jpeg_roundtrip", "run"]
+__all__ = ["synthetic_aerial", "roundtrip_blocks", "jpeg_roundtrip", "run"]
 
 # standard JPEG luminance quantisation table
 QTABLE = np.array([
@@ -33,6 +33,7 @@ QTABLE = np.array([
 
 def _dct_matrix(n: int = 8) -> np.ndarray:
     k = np.arange(n)
+    # audit: exact — host-side DCT basis constants, computed once in numpy
     c = np.sqrt(2.0 / n) * np.cos((2 * k[None, :] + 1) * k[:, None] * np.pi
                                   / (2 * n))
     c[0] /= np.sqrt(2.0)
@@ -48,7 +49,7 @@ def synthetic_aerial(size: int = 512, seed: int = 0) -> np.ndarray:
         coarse = rng.normal(size=(n, n))
         rep = -(-size // n)  # ceil: cover any size, then crop
         up = np.kron(coarse, np.ones((rep, rep)))
-        img += up[:size, :size] / octave
+        img += up[:size, :size] / octave  # audit: exact — host-side numpy synthesis
     # field boundaries (straight lines) and a few bright structures
     for _ in range(12):
         o = rng.integers(0, size)
@@ -60,6 +61,7 @@ def synthetic_aerial(size: int = 512, seed: int = 0) -> np.ndarray:
         y, x = rng.integers(16, size - 16, 2)
         img[y - 3: y + 3, x - 3: x + 3] += rng.uniform(2, 4)
     img = img - img.min()
+    # audit: exact — host-side numpy image synthesis, never traced
     img = img / img.max() * 255.0
     return img.astype(np.float32)
 
@@ -75,21 +77,16 @@ def _unblockify(blocks: np.ndarray, h: int, w: int, n: int = 8):
             .reshape(h, w))
 
 
-def jpeg_roundtrip(img: np.ndarray, variant: Variant,
-                   quality_scale: float = 1.0) -> np.ndarray:
-    """Compress + decompress with the variant's mul/div kernels."""
+def roundtrip_blocks(blocks: jnp.ndarray, variant: Variant,
+                     q: jnp.ndarray) -> jnp.ndarray:
+    """jnp-only JPEG core: DCT -> quant -> dequant -> IDCT on [N, 8, 8]
+    centred blocks (the traceable unit the dispatch auditor censuses)."""
     C = jnp.asarray(_dct_matrix())
-    q = jnp.asarray(QTABLE * quality_scale)
-    blocks = jnp.asarray(_blockify(img)) - 128.0
 
     # 2D DCT: C @ X @ C^T, both matmuls through the variant multiplier
     def mm(a, b):
-        """Batched [.., 8, 8] x [.., 8, 8] through the variant multiplier."""
-        if variant.mul_kind == "exact":
-            return a @ b
         bb = jnp.broadcast_to(b, a.shape[:-2] + b.shape[-2:])
-        prod = variant.mul(a[..., :, :, None], bb[..., None, :, :])
-        return prod.sum(axis=-2)
+        return variant.matmul_batched(a, bb)
 
     coef = mm(mm(jnp.broadcast_to(C, blocks.shape[:1] + C.shape), blocks),
               C.T)
@@ -98,7 +95,15 @@ def jpeg_roundtrip(img: np.ndarray, variant: Variant,
     # dequant (multiplier kernel)
     dq = variant.mul(quant, q[None])
     rec = mm(mm(jnp.broadcast_to(C.T, blocks.shape[:1] + C.shape), dq), C)
-    rec = jnp.clip(rec + 128.0, 0, 255)
+    return jnp.clip(rec + 128.0, 0, 255)
+
+
+def jpeg_roundtrip(img: np.ndarray, variant: Variant,
+                   quality_scale: float = 1.0) -> np.ndarray:
+    """Compress + decompress with the variant's mul/div kernels."""
+    q = jnp.asarray(QTABLE * quality_scale)
+    blocks = jnp.asarray(_blockify(img)) - 128.0
+    rec = roundtrip_blocks(blocks, variant, q)
     return np.asarray(_unblockify(np.asarray(rec), *img.shape))
 
 

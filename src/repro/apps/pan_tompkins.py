@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.apps.arith import VARIANTS, Variant, psnr
 
-__all__ = ["synthetic_ecg", "detect_qrs", "run", "score"]
+__all__ = ["synthetic_ecg", "integrate_energy", "detect_qrs", "run", "score"]
 
 FS = 200  # Hz, the original Pan-Tompkins design rate
 
@@ -39,6 +39,7 @@ def synthetic_ecg(n_beats: int = 60, seed: int = 0):
     sig = np.zeros(n, np.float32)
 
     def bump(center, width, amp):
+        # audit: exact — host-side numpy ECG synthesis, never traced
         return amp * np.exp(-0.5 * ((t - center) / width) ** 2)
 
     for p in peaks:
@@ -48,6 +49,7 @@ def synthetic_ecg(n_beats: int = 60, seed: int = 0):
         sig += bump(p + 0.05 * FS, 0.025 * FS, -0.2 * a)   # S
         sig += bump(p - 0.18 * FS, 0.04 * FS, 0.15 * a)    # P
         sig += bump(p + 0.3 * FS, 0.06 * FS, 0.3 * a)      # T
+    # audit: exact — host-side numpy ECG synthesis, never traced
     sig += 0.1 * np.sin(2 * np.pi * 0.3 * t / FS)          # baseline wander
     sig += rng.normal(0, 0.03, n).astype(np.float32)       # noise
     return sig.astype(np.float32), peaks
@@ -67,13 +69,13 @@ def _bandpass_derivative(x: np.ndarray) -> np.ndarray:
     hp = np.zeros(n, np.float64)
     for i in range(n):  # y = y1 - x/32 + x16 - x17 + x32/32
         hp[i] = hp[i - 1] if i >= 1 else 0.0
-        hp[i] -= lp[i] / 32.0
+        hp[i] -= lp[i] / 32.0  # audit: exact — power-of-two shift (paper keeps filters exact)
         if i >= 16:
             hp[i] += lp[i - 16]
         if i >= 17:
             hp[i] -= lp[i - 17]
         if i >= 32:
-            hp[i] += lp[i - 32] / 32.0
+            hp[i] += lp[i - 32] / 32.0  # audit: exact — power-of-two shift
     der = np.zeros(n, np.float64)
     for i in range(n):  # (2x + x1 - x3 - 2x4)/8
         v = 2 * hp[i]
@@ -83,20 +85,24 @@ def _bandpass_derivative(x: np.ndarray) -> np.ndarray:
             v -= hp[i - 3]
         if i >= 4:
             v -= 2 * hp[i - 4]
-        der[i] = v / 8.0
+        der[i] = v / 8.0  # audit: exact — power-of-two shift
     return der.astype(np.float32)
+
+
+def integrate_energy(der: jnp.ndarray, variant: Variant) -> jnp.ndarray:
+    """jnp-only PT core (the traceable unit the dispatch auditor
+    censuses): squaring through the variant multiplier, then the
+    moving-window integration whose mean divide runs the divider kernel."""
+    sq = variant.mul(der, der)  # squaring — the multiplier hot spot
+    w = int(0.15 * FS)  # ~150 ms window
+    acc = jnp.convolve(sq, jnp.ones(w, jnp.float32), mode="same")
+    return variant.div(acc, jnp.full_like(acc, float(w)))
 
 
 def detect_qrs(sig: np.ndarray, variant: Variant):
     """Returns (detected_peak_indices, integrated_signal)."""
     der = _bandpass_derivative(sig)
-    # squaring — the multiplier hot spot
-    d = jnp.asarray(der)
-    sq = variant.mul(d, d)
-    # moving-window integration (~150 ms): the mean's divide kernel
-    w = int(0.15 * FS)
-    acc = jnp.convolve(sq, jnp.ones(w, jnp.float32), mode="same")
-    integ = variant.div(acc, jnp.full_like(acc, float(w)))
+    integ = integrate_energy(jnp.asarray(der), variant)
 
     integ_np = np.asarray(integ)
     thr = 0.3 * np.median(np.sort(integ_np)[-max(len(integ_np) // 20, 1):])
@@ -134,6 +140,7 @@ def score(det: np.ndarray, truth: np.ndarray, tol: float = 0.1):
             tp += 1
     fn = len(truth) - tp
     fp = len(det) - tp
+    # audit: exact — host-side QoR scoring, not an approximated datapath
     return tp / max(tp + fn, 1), tp / max(tp + fp, 1)
 
 

@@ -93,6 +93,8 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "registered_sites",
+    "dispatch_signature",
     "resolve_backend_name",
     "resolve_site_device_local",
     "pin_backend_name",
@@ -446,6 +448,38 @@ def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
 
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def registered_sites() -> Tuple[str, ...]:
+    """Every site name an ApproxConfig backend map can carry.
+
+    The public answer to "what call sites does the registry dispatch?"
+    — the dispatch auditor iterates it, and tests that used to reach
+    into ``configs.base.BACKEND_SITES`` (or the private ``_REGISTRY``)
+    ask here instead.  "default" leads: it is the fallback every other
+    site defers to.
+    """
+    from repro.configs.base import BACKEND_SITES  # local: avoid cycle
+
+    return ("default",) + BACKEND_SITES
+
+
+def dispatch_signature(name: str) -> Dict[str, str]:
+    """family -> implementing ``module:qualname`` for one backend.
+
+    Introspection for the auditor and tests: states *which function*
+    each registry family (matmul / div / softmax_div / rms_div) actually
+    dispatches to, without reaching into the private registry dict.
+    ``name`` resolves through the normal selection precedence, so
+    ``dispatch_signature("auto")`` answers for the ambient default.
+    """
+    b = _REGISTRY[resolve_backend_name(name)]
+    return {
+        family: f"{fn.__module__}:{fn.__qualname__}"
+        for family, fn in (("matmul", b.matmul), ("div", b.div),
+                           ("softmax_div", b.softmax_div),
+                           ("rms_div", b.rms_div))
+    }
 
 
 def set_default_backend(name: Optional[str]) -> None:

@@ -1,0 +1,89 @@
+"""Operator CLI: dispatch-coverage audit with optional HLO cross-check.
+
+``python -m repro.launch.audit`` wraps the two-layer auditor
+(``repro.analysis``) for operators who want one command that
+
+  * runs the AST lint + jaxpr census against ``AUDIT_baseline.json``
+    (auto-detected at the repo root when ``--baseline`` is omitted), and
+  * optionally cross-checks a dumped HLO module (``--hlo path``): the
+    jaxpr census counts dot/div *equations*; ``count_ops`` counts the
+    ``dot`` / ``divide`` instructions XLA actually emitted.  A compiled
+    count far above the traced one means XLA re-materialised arithmetic
+    the registry never saw (e.g. constant-folding got disabled), which
+    the trace-level audit alone cannot catch.
+
+Dump HLO for the cross-check with
+``jax.jit(fn).lower(*args).compile().as_text()`` or via the dryrun
+tooling in :mod:`repro.launch.dryrun`.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+__all__ = ["main", "hlo_crosscheck"]
+
+
+def hlo_crosscheck(hlo_text: str, jaxpr_meta: dict) -> List[str]:
+    """Compare compiled dot/divide counts against the traced census.
+
+    Returns human-readable lines; never fails the run — compiled counts
+    legitimately differ (fusion duplication, algebraic rewrites), so the
+    cross-check is a report, not a gate.
+    """
+    from repro.launch.hlo_analysis import count_ops
+
+    compiled = count_ops(hlo_text, ops=("dot", "divide"))
+    traced = sum(m.get("eqns_audited", 0) for m in jaxpr_meta.values())
+    lines = [
+        f"hlo cross-check: compiled dot={compiled['dot']} "
+        f"divide={compiled['divide']} vs {traced} traced dot/div eqns "
+        f"across {len(jaxpr_meta)} entries",
+    ]
+    n_compiled = compiled["dot"] + compiled["divide"]
+    if traced and n_compiled > 2 * traced:
+        lines.append(
+            "hlo cross-check: compiled count exceeds 2x the traced census "
+            "— XLA may be re-materialising arithmetic outside the registry")
+    return lines
+
+
+def _default_baseline() -> str:
+    root = Path(__file__).resolve().parents[3]
+    p = root / "AUDIT_baseline.json"
+    return str(p) if p.exists() else ""
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.audit",
+        description="dispatch-coverage audit (lint + jaxpr) with optional "
+                    "HLO cross-check")
+    ap.add_argument("--entries", default="",
+                    help="comma-separated jaxpr entry subset (default: all)")
+    ap.add_argument("--baseline", default=_default_baseline(),
+                    metavar="PATH", help="ratchet baseline "
+                    "(default: repo AUDIT_baseline.json if present)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the merged JSON report")
+    ap.add_argument("--hlo", default="", metavar="PATH",
+                    help="dumped HLO text to cross-check against")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.__main__ import run_combined
+
+    rc, _, jaxpr_meta = run_combined(
+        entries=[n for n in args.entries.split(",") if n] or None,
+        baseline=args.baseline or None, json_path=args.json or None)
+
+    if args.hlo:
+        hlo_text = Path(args.hlo).read_text()
+        for line in hlo_crosscheck(hlo_text, jaxpr_meta):
+            sys.stdout.write(line + "\n")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

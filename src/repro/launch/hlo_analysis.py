@@ -28,7 +28,8 @@ import re
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
-__all__ = ["HW", "analyze_hlo", "roofline_terms", "parse_hlo_collectives"]
+__all__ = ["HW", "analyze_hlo", "roofline_terms", "parse_hlo_collectives",
+           "iter_instructions", "count_ops"]
 
 _DT_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -125,6 +126,39 @@ class _Module:
                 for c in re.findall(r"constant\((\d+)\)", cl):
                     trip = max(trip, int(c))
         return trip
+
+
+def iter_instructions(hlo: str):
+    """Flat iterator over ``(computation, name, shape, op, line)`` for
+    every parsed instruction in the module, fusion/while bodies included.
+
+    The shared walking idiom: ``analyze_hlo`` below recurses the same
+    parse for trip-weighted cost, and ``repro.launch.audit`` uses this
+    flat view to cross-check the jaxpr dispatch census against what XLA
+    actually compiled.
+    """
+    mod = _Module(hlo)
+    for comp, lines in mod.comps.items():
+        for line in lines:
+            mi = _INSTR_RE.match(line)
+            if mi:
+                name, shape, op = mi.groups()
+                yield comp, name, shape, op, line
+
+
+def count_ops(hlo: str, ops: Tuple[str, ...] = ("dot", "divide")
+              ) -> Dict[str, int]:
+    """Static opcode census over all computations (not trip-weighted).
+
+    A ``while`` body counts once regardless of trip count — the census
+    answers "how many distinct dot/divide sites did XLA emit", the same
+    granularity as the jaxpr layer's per-eqn count.
+    """
+    out = {op: 0 for op in ops}
+    for _, _, _, op, _ in iter_instructions(hlo):
+        if op in out:
+            out[op] += 1
+    return out
 
 
 def analyze_hlo(hlo: str) -> dict:

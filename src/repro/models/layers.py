@@ -17,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ApproxConfig, ModelConfig
 from repro.core.backend import SOFTMAX_FLOOR, Epilogue
-from repro.core.ops import qdiv, qmatmul, qrms_div, qsoftmax_div
+from repro.core.ops import exact_einsum, qdiv, qmatmul, qrms_div, qsoftmax_div
 from repro.models.params import P
 
 __all__ = [
@@ -151,6 +151,7 @@ def rope(x, positions, theta: float):
     """Rotary embedding, llama-style half rotation. x: [..., S, H, hd]."""
     hd = x.shape[-1]
     half = hd // 2
+    # audit: exact — rotary frequency table (position math, not a datapath divide)
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
     cos = jnp.cos(ang)[..., None, :]
@@ -186,7 +187,7 @@ def _online_softmax_combine(acc, l, m, acfg: ApproxConfig):
     if sch:
         return qdiv(acc, l[..., None], sch,
                     backend=acfg.backend_for("softmax"))
-    return acc / l[..., None]
+    return acc / l[..., None]  # audit: exact — the exact-softmax arm (sch is None)
 
 
 def _attn_blockwise(q, k, v, q_pos, kv_pos, window: int, causal: bool,
@@ -210,13 +211,14 @@ def _attn_blockwise(q, k, v, q_pos, kv_pos, window: int, causal: bool,
     vs = v.reshape(B, steps, chunk, KVh, hd).transpose(1, 0, 2, 3, 4)
     kvp = kv_pos.reshape(steps, chunk)
 
+    # audit: exact — trace-constant 1/sqrt(hd) (folds at trace time)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     qf = q.astype(jnp.float32) * scale
 
     def body(carry, xs):
         m, l, acc = carry
         kc, vc, pc = xs
-        s = jnp.einsum("bskgh,bckh->bskgc", qf, kc.astype(jnp.float32))
+        s = exact_einsum("bskgh,bckh->bskgc", qf, kc.astype(jnp.float32))
         mask = jnp.ones((S, chunk), bool)
         if causal:
             mask &= pc[None, :] <= q_pos[:, None]
@@ -229,7 +231,7 @@ def _attn_blockwise(q, k, v, q_pos, kv_pos, window: int, causal: bool,
         p = jnp.where(jnp.isfinite(m_new)[..., None], p, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
         l = l * corr + p.sum(axis=-1)
-        pv = jnp.einsum("bskgc,bckh->bskgh", p, vc.astype(jnp.float32))
+        pv = exact_einsum("bskgc,bckh->bskgh", p, vc.astype(jnp.float32))
         acc = acc * corr[..., None] + pv
         return (m_new, l, acc), None
 
@@ -244,8 +246,8 @@ def _attn_blockwise(q, k, v, q_pos, kv_pos, window: int, causal: bool,
 def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
                       acfg: ApproxConfig):
     """Scores+softmax+PV for one (pre-scaled) q chunk against full K/V."""
-    s = jnp.einsum("bshd,bthd->bhst", qc.astype(jnp.float32),
-                   k.astype(jnp.float32))
+    s = exact_einsum("bshd,bthd->bhst", qc.astype(jnp.float32),
+                     k.astype(jnp.float32))
     mask = jnp.ones((qc.shape[1], k.shape[1]), bool)
     if causal:
         mask &= kv_pos[None, :] <= qp[:, None]
@@ -261,7 +263,7 @@ def _attn_qchunk_core(qc, k, v, qp, kv_pos, window: int, causal: bool,
         p = qsoftmax_div(e, sch, backend=acfg.backend_for("softmax"))
     else:
         p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return exact_einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
 
 
 _Q_CHUNK = 1024
@@ -277,6 +279,7 @@ def _attn_plain(q, k, v, q_pos, kv_pos, window: int, causal: bool,
     memory at O(chunk x T) per layer instead of several live O(S x T)
     tensors (flash-attention-style, without a custom bwd)."""
     B, S, H, hd = q.shape
+    # audit: exact — trace-constant 1/sqrt(hd) (folds at trace time)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     qs = q.astype(jnp.float32) * scale
     if S <= _Q_CHUNK:
@@ -386,6 +389,7 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
     B, H, hd = q.shape
     KV = k_cache.shape[2]
     G = H // KV
+    # audit: exact — trace-constant 1/sqrt(hd) (folds at trace time)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     qf = (q.astype(jnp.float32) * scale).reshape(B, KV, G, hd)
     # [B] per-slot positions broadcast against [B, C] slot maps; the
@@ -399,7 +403,7 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
         posq = posq[:, None]
 
     def local_stats(qc, kc, vc, sp):
-        s = jnp.einsum("bkgh,bckh->bkgc", qc, kc.astype(jnp.float32))
+        s = exact_einsum("bkgh,bckh->bkgc", qc, kc.astype(jnp.float32))
         mask = sp <= posq
         if window:
             mask &= sp > posq - window
@@ -407,7 +411,7 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
         m = s.max(axis=-1)
         p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
         l = p.sum(axis=-1)
-        acc = jnp.einsum("bkgc,bckh->bkgh", p, vc.astype(jnp.float32))
+        acc = exact_einsum("bkgc,bckh->bkgh", p, vc.astype(jnp.float32))
         return m, l, acc
 
     if seq_shard_axis is None:
@@ -465,9 +469,10 @@ def chunk_cache_attention(q, k_cache, v_cache, q_pos, kv_pos, window: int,
     B, S, H, hd = q.shape
     KV = k_cache.shape[2]
     G = H // KV
+    # audit: exact — trace-constant 1/sqrt(hd) (folds at trace time)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     qf = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, hd)
-    s = jnp.einsum("bskgh,bckh->bskgc", qf, k_cache.astype(jnp.float32))
+    s = exact_einsum("bskgh,bckh->bskgc", qf, k_cache.astype(jnp.float32))
     mask = kv_pos[:, None, :] <= q_pos[:, :, None]  # [B, S, C]
     if window:
         mask &= kv_pos[:, None, :] > q_pos[:, :, None] - window
@@ -475,7 +480,7 @@ def chunk_cache_attention(q, k_cache, v_cache, q_pos, kv_pos, window: int,
     m = s.max(axis=-1)
     p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
     l = p.sum(axis=-1)
-    acc = jnp.einsum("bskgc,bckh->bskgh", p, v_cache.astype(jnp.float32))
+    acc = exact_einsum("bskgc,bckh->bskgh", p, v_cache.astype(jnp.float32))
     out = _online_softmax_combine(acc, l, m, acfg)
     return out.reshape(B, S, H * hd).astype(q.dtype)
 

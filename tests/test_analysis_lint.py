@@ -1,0 +1,212 @@
+"""Layer-1 lint: one positive + one negative case per RPD rule, the
+marker contract, and the baseline-ratchet semantics."""
+import textwrap
+
+from repro.analysis import findings as F
+from repro.analysis.findings import Finding
+from repro.analysis.rules import RULES, lint_source, zone_of
+from pathlib import Path
+
+import pytest
+
+
+def lint(src, zone="models", file="src/repro/models/x.py"):
+    return lint_source(textwrap.dedent(src), file, zone)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------
+# RPD001 — raw matmul outside core/+kernels/
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("expr", [
+    "y = x @ w",
+    "y = jnp.einsum('ij,jk->ik', x, w)",
+    "y = jnp.dot(x, w)",
+    "y = jnp.matmul(x, w)",
+    "y = jax.lax.dot_general(x, w, dims)",
+    "y = lax.dot_general(x, w, dims)",
+])
+def test_rpd001_positive(expr):
+    got = lint(f"def f(x, w, dims):\n    {expr}\n")
+    assert rules_of(got) == ["RPD001"], got
+
+
+def test_rpd001_exempt_zones():
+    src = "def f(x, w):\n    return x @ w\n"
+    assert lint(src, zone="core", file="src/repro/core/x.py") == []
+    assert lint(src, zone="kernels", file="src/repro/kernels/x.py") == []
+    # the registry-routed and declared-exact spellings never flag
+    ok = lint("""
+        def f(x, w):
+            a = qmatmul(x, w, "rapid10")
+            return exact_einsum("ij,jk->ik", a, w)
+    """)
+    assert ok == []
+
+
+# --------------------------------------------------------------------------
+# RPD002 — raw true-division in the dispatch zones
+# --------------------------------------------------------------------------
+
+def test_rpd002_positive_and_zone_scoping():
+    src = "def f(a, b):\n    return a / b\n"
+    assert rules_of(lint(src, zone="models")) == ["RPD002"]
+    assert rules_of(lint(src, zone="serve")) == ["RPD002"]
+    # launch/ is an analysis zone, not a datapath zone
+    assert lint(src, zone="launch", file="src/repro/launch/x.py") == []
+
+
+def test_rpd002_divide_call_and_const_exemption():
+    got = lint("def f(a, b):\n    return jnp.divide(a, b)\n")
+    assert rules_of(got) == ["RPD002"]
+    # literal-only arithmetic can never be a traced array divide
+    assert lint("SCALE = 1.0 / 8\n") == []
+    assert lint("def f():\n    return -2.0 / (3 * 4)\n") == []
+
+
+# --------------------------------------------------------------------------
+# the '# audit: exact' marker contract
+# --------------------------------------------------------------------------
+
+def test_marker_with_reason_suppresses():
+    got = lint("""
+        def f(a, b):
+            return a / b  # audit: exact — reference arm
+    """)
+    assert got == []
+
+
+def test_marker_without_reason_does_not_suppress():
+    got = lint("""
+        def f(a, b):
+            return a / b  # audit: exact
+    """)
+    assert rules_of(got) == ["RPD002"]
+    assert "missing the mandatory reason" in got[0].msg
+
+
+def test_standalone_marker_covers_next_line():
+    got = lint("""
+        def f(a, b):
+            # audit: exact — host-side metric
+            return a / b
+    """)
+    assert got == []
+
+
+def test_marker_inside_string_is_ignored():
+    got = lint("""
+        def f(a, b):
+            s = "# audit: exact — not a comment"
+            return a / b
+    """)
+    assert rules_of(got) == ["RPD002"]
+
+
+# --------------------------------------------------------------------------
+# RPD003 — LUT construction under jit
+# --------------------------------------------------------------------------
+
+def test_rpd003_lut_in_jit():
+    got = lint("""
+        @jax.jit
+        def f(x):
+            t = lut_host("mitchell", 10)
+            return x
+    """)
+    assert rules_of(got) == ["RPD003"]
+
+
+def test_rpd003_module_level_lut_ok():
+    assert lint('T = lut_host("mitchell", 10)\n') == []
+    # jit present but the LUT call is outside the decorated function
+    got = lint("""
+        T = mul_lut_device("rapid10")
+
+        @jax.jit
+        def f(x):
+            return x
+    """)
+    assert got == []
+
+
+# --------------------------------------------------------------------------
+# RPD004 — literal backend strings at call sites
+# --------------------------------------------------------------------------
+
+def test_rpd004_literal_backend():
+    got = lint('def f(a, b):\n    return qdiv(a, b, "r", backend="pallas")\n')
+    assert rules_of(got) == ["RPD004"]
+
+
+def test_rpd004_backend_for_ok():
+    got = lint("""
+        def f(a, b, cfg):
+            return qdiv(a, b, "r", backend=cfg.backend_for("mlp"))
+    """)
+    assert got == []
+
+
+# --------------------------------------------------------------------------
+# misc: syntax errors surface as findings; zone mapping
+# --------------------------------------------------------------------------
+
+def test_syntax_error_is_a_finding():
+    got = lint("def f(:\n")
+    assert rules_of(got) == ["RPD000"]
+
+
+def test_zone_of():
+    assert zone_of(Path("models/layers.py")) == "models"
+    assert zone_of(Path("compat.py")) == "<top>"
+
+
+def test_rules_table_complete():
+    assert set(RULES) == {"RPD001", "RPD002", "RPD003", "RPD004"}
+
+
+# --------------------------------------------------------------------------
+# baseline ratchet (shared by both layers)
+# --------------------------------------------------------------------------
+
+def _ast(file, code, rule="RPD002"):
+    return Finding(layer="ast", rule=rule, file=file, line=1,
+                   msg="m", code=code)
+
+
+def test_ratchet_new_allowlisted_stale():
+    base = [_ast("a.py", "x = a / b"), _ast("b.py", "y = c / d")]
+    cur = [_ast("a.py", "x = a / b"),          # allowlisted
+           _ast("a.py", "z = e / f")]          # new
+    res = F.compare(cur, base)
+    assert not res.ok
+    assert [f.code for f in res.new] == ["z = e / f"]
+    assert [f.code for f in res.matched] == ["x = a / b"]
+    assert [f.file for f in res.stale] == ["b.py"]   # warns, doesn't fail
+    assert any("stale" in w for w in res.warnings)
+
+
+def test_ratchet_key_ignores_line_numbers():
+    base = [_ast("a.py", "x = a / b")]
+    moved = [Finding(layer="ast", rule="RPD002", file="a.py", line=99,
+                     msg="m", code="x = a / b")]
+    assert F.compare(moved, base).ok
+
+
+def test_ratchet_multiset_second_copy_is_new():
+    base = [_ast("a.py", "x = a / b")]
+    cur = [_ast("a.py", "x = a / b"), _ast("a.py", "x = a / b")]
+    res = F.compare(cur, base)
+    assert len(res.new) == 1 and len(res.matched) == 1
+
+
+def test_report_roundtrips_as_baseline(tmp_path):
+    findings = [_ast("a.py", "x = a / b")]
+    p = tmp_path / "r.json"
+    F.dump_report(str(p), findings, [])
+    assert [f.key() for f in F.load_baseline(str(p))] \
+        == [findings[0].key()]

@@ -754,3 +754,28 @@ def test_fused_epilogue_kernel_interpret_vs_reference(rng):
                        interpret=True)
     want = be.apply_epilogue(raw, b, "silu")
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# introspection (the dispatch auditor's registry surface)
+# --------------------------------------------------------------------------
+
+def test_registered_sites_covers_config_sites():
+    from repro.configs.base import BACKEND_SITES
+
+    sites = be.registered_sites()
+    assert sites[0] == "default"
+    assert set(BACKEND_SITES) <= set(sites)
+
+
+def test_dispatch_signature_resolves_families():
+    sig = be.dispatch_signature("jnp")
+    assert set(sig) == {"matmul", "div", "softmax_div", "rms_div"}
+    for target in sig.values():
+        mod, sep, qual = target.partition(":")
+        assert sep and mod and qual, target
+
+
+def test_dispatch_signature_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown backend"):
+        be.dispatch_signature("no-such-backend")
