@@ -141,12 +141,13 @@ print("decode compiled", eng.trace_counts["decode"], "time(s); pages free:",
 # The paper's end-to-end numbers assume the approximate units replaced
 # *every* multiply/divide in the datapath — one raw `/` or `@` silently
 # reverts a site to exact arithmetic.  repro.analysis proves coverage
-# in two layers:
+# in three layers:
 #
-#   PYTHONPATH=src python -m repro.analysis.lint         # layer 1 (fast)
-#   PYTHONPATH=src python -m repro.analysis.jaxpr_audit  # layer 2 (traces)
+#   PYTHONPATH=src python -m repro.analysis.lint          # layer 1 (fast)
+#   PYTHONPATH=src python -m repro.analysis.jaxpr_audit   # layer 2 (traces)
+#   PYTHONPATH=src python -m repro.analysis.kernel_audit  # layer 3 (geometry)
 #   PYTHONPATH=src python -m repro.analysis \
-#       --baseline AUDIT_baseline.json --json report.json   # both + ratchet
+#       --baseline AUDIT_baseline.json --json report.json   # all + ratchet
 #
 # Layer 1 is an AST lint (rules RPD001-RPD004: raw matmul/div in
 # models/apps/serve/train, LUT re-baking under jit, literal backend
@@ -158,18 +159,51 @@ print("decode compiled", eng.trace_counts["decode"], "time(s); pages free:",
 # frame is outside core/+kernels/ is an escape.  It also flags retrace
 # hazards (unhashable config leaves) and duplicated baked-in LUTs.
 #
-# A genuinely-exact site is declared, with a mandatory reason:
+# A genuinely-exact site is declared, with a mandatory reason (inline,
+# or as the LAST comment line directly above the statement):
 #
 #     return acc / l[..., None]  # audit: exact — the exact-softmax arm
 #
+# --- kernel geometry audit (layer 3) -------------------------------------
+# Layers 1+2 prove mul/div *route through* the registry; layer 3 proves
+# the Pallas kernels the registry dispatches are geometrically legal
+# before they touch a TPU.  A capture shim (repro.analysis.capture)
+# monkeypatches pl.pallas_call under jax.disable_jit(), drives every
+# registered kernel family (log_matmul, the fused_div variants,
+# rapid_mul/rapid_div) through its public wrapper across the bench
+# shape classes, and checks each captured grid/BlockSpec/index-map:
+#
+#   RPD005  per-grid-step VMEM working set (double-buffered) vs the
+#           explicit budget in repro.kernels.budget — the same
+#           constants _pick_blocks derives block sizes from
+#   RPD006  lane (%128) / sublane (%8) alignment, blocks divide the
+#           padded dims
+#   RPD007  index maps surjective onto the block grid (a non-surjective
+#           map silently drops elements) + every registry family has an
+#           audited variant
+#   RPD008  output tiles revisited across a grid dim must accumulate or
+#           guard with pl.when(program_id == first/last), never on a
+#           "parallel" dim
+#
+#   PYTHONPATH=src python -m repro.analysis.kernel_audit --list-variants
+#   PYTHONPATH=src python -m repro.analysis.kernel_audit \
+#       --report PIPELINE_REPORT.json
+#
+# The committed PIPELINE_REPORT.json records per-variant pipeline
+# legality (grid, semantics, working set, revisit discipline,
+# double_buffer_safe) — the contract the software-pipelining work must
+# preserve.
+#
 # Everything else lives in AUDIT_baseline.json: a *ratchet* — new
-# escapes fail CI (the `audit` job, on both jax pins), known ones are
-# allowlisted for burn-down, entries you fixed warn as stale.  After an
-# intentional change, regenerate with
+# findings in any layer fail CI (the `audit` job, on both jax pins),
+# known ones are allowlisted for burn-down, entries you fixed warn as
+# stale (CI passes --fail-stale, so fix means shrink the baseline).
+# After an intentional change, regenerate with
 # `PYTHONPATH=src python -m repro.analysis --json AUDIT_baseline.json`
-# and review the diff like code.  Operators get the same thing plus an
-# optional compiled-HLO cross-check via `python -m repro.launch.audit
-# --hlo dumped.txt`.
+# (or drop fixed entries in place with `--baseline AUDIT_baseline.json
+# --prune-stale`) and review the diff like code.  Operators get the
+# same thing plus an optional compiled-HLO cross-check via
+# `python -m repro.launch.audit --hlo dumped.txt`.
 from repro.analysis import RULES
 from repro.core.backend import dispatch_signature, registered_sites
 

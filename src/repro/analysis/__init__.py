@@ -1,6 +1,6 @@
-"""Static-analysis subsystem proving RAPID dispatch coverage.
+"""Static-analysis subsystem proving RAPID dispatch + kernel coverage.
 
-Two layers over one report format (``findings.Finding`` + the ratchet
+Three layers over one report format (``findings.Finding`` + the ratchet
 in ``findings.compare``):
 
 * ``repro.analysis.rules`` / ``repro.analysis.lint`` — AST rules
@@ -10,10 +10,16 @@ in ``findings.compare``):
   censuses ``dot_general`` / ``div`` primitives that escape the
   registry-dispatched paths, plus retrace hazards and duplicated
   large constants.
+* ``repro.analysis.kernel_audit`` — captures every registered Pallas
+  kernel family's ``pallas_call`` geometry (``repro.analysis.capture``,
+  no TPU needed) and statically checks VMEM budget, lane/sublane
+  tiling, index-map surjectivity, and output-revisit write discipline
+  (RPD005..RPD008), emitting the pipeline-legality report
+  (``PIPELINE_REPORT.json``) the software-pipelining work must honour.
 
-``python -m repro.analysis`` runs both layers and ratchets against the
-committed ``AUDIT_baseline.json`` (see that file and the quickstart's
-"auditing approximate-dispatch coverage" section).
+``python -m repro.analysis`` runs all three layers and ratchets against
+the committed ``AUDIT_baseline.json`` (see that file and the
+quickstart's "auditing approximate-dispatch coverage" section).
 """
 from repro.analysis.findings import (  # noqa: F401
     CompareResult,
@@ -21,5 +27,6 @@ from repro.analysis.findings import (  # noqa: F401
     compare,
     dump_report,
     load_baseline,
+    prune_stale,
 )
-from repro.analysis.rules import RULES  # noqa: F401
+from repro.analysis.rules import KERNEL_RULES, RULES  # noqa: F401

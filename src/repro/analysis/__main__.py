@@ -1,12 +1,16 @@
-"""Combined two-layer audit runner (what the CI ``audit`` job executes).
+"""Combined three-layer audit runner (what the CI ``audit`` job executes).
 
     PYTHONPATH=src python -m repro.analysis \
-        --baseline AUDIT_baseline.json --json AUDIT_PR.json
+        --baseline AUDIT_baseline.json --json AUDIT_PR.json \
+        --pipeline-report PIPELINE_REPORT.json --fail-stale
 
-Runs the AST lint and the jaxpr entry-point audit, merges both into one
-JSON report, and ratchets against the committed baseline: allowlisted
-findings pass, new escapes exit 1 (with file:line for AST findings and
-entry/primitive for jaxpr escapes), stale allowlist entries warn.
+Runs the AST lint, the jaxpr entry-point audit, and the kernel geometry
+audit; merges all three into one JSON report; and ratchets against the
+committed baseline: allowlisted findings pass, new escapes exit 1 (with
+file:line for AST findings, entry/primitive for jaxpr escapes, and
+variant/operand for kernel-geometry findings), stale allowlist entries
+warn — or fail with ``--fail-stale`` (CI), or are removed mechanically
+with ``--prune-stale``.
 
 Regenerating the allowlist after an intentional change is the same
 command with the report written *as* the baseline:
@@ -16,29 +20,59 @@ command with the report written *as* the baseline:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.analysis import findings as F
 from repro.analysis import jaxpr_audit, lint
 
+ALL_LAYERS = ("ast", "jaxpr", "kernel")
+
 
 def run_combined(entries: Optional[List[str]] = None,
                  baseline: Optional[str] = None,
-                 json_path: Optional[str] = None):
-    """Both layers + ratchet + report; returns (rc, findings, jaxpr_meta).
+                 json_path: Optional[str] = None,
+                 *,
+                 layers: Sequence[str] = ALL_LAYERS,
+                 fail_stale: bool = False,
+                 prune_stale: bool = False,
+                 pipeline_report: Optional[str] = None):
+    """All layers + ratchet + report; returns (rc, findings, jaxpr_meta).
 
     The programmatic face of ``python -m repro.analysis``, also driven
     by the operator CLI in :mod:`repro.launch.audit`.
     """
-    ast_findings = lint.run_lint()
-    jaxpr_findings, meta = jaxpr_audit.run_audit(entries)
-    current = ast_findings + jaxpr_findings
+    ast_findings = lint.run_lint() if "ast" in layers else []
+    jaxpr_findings: List[F.Finding] = []
+    meta: dict = {}
+    if "jaxpr" in layers:
+        jaxpr_findings, meta = jaxpr_audit.run_audit(entries)
+    kernel_findings: List[F.Finding] = []
+    kernel_reports: List[dict] = []
+    if "kernel" in layers:
+        from repro.analysis import kernel_audit
+        kernel_findings, kernel_reports = kernel_audit.run_kernel_audit()
+    current = ast_findings + jaxpr_findings + kernel_findings
 
     print(f"ast lint: {len(ast_findings)} finding(s); "
           f"jaxpr audit: {sum(f.count for f in jaxpr_findings)} escaped "
-          f"eqn(s) across {len(meta)} entries")
+          f"eqn(s) across {len(meta)} entries; "
+          f"kernel audit: {len(kernel_findings)} finding(s) across "
+          f"{len(kernel_reports)} variants")
     jaxpr_audit.print_meta(meta)
+
+    if pipeline_report and kernel_reports:
+        from repro.analysis import kernel_audit
+        with open(pipeline_report, "w") as fh:
+            json.dump(kernel_audit.pipeline_report_doc(kernel_reports),
+                      fh, indent=2)
+            fh.write("\n")
+        unsafe = [r["variant"] for r in kernel_reports
+                  if not r["double_buffer_safe"]]
+        print(f"pipeline-legality report ({len(kernel_reports)} kernels, "
+              f"{len(unsafe)} not double-buffer-safe) written to "
+              f"{pipeline_report}")
 
     result = None
     if baseline:
@@ -51,19 +85,33 @@ def run_combined(entries: Optional[List[str]] = None,
             print(f"warning: {w}")
         print(f"ratchet vs {baseline}: {result.summary()}")
         ok = result.ok
+        if prune_stale and result.stale:
+            removed = F.prune_stale(baseline, current)
+            print(f"pruned {removed} stale entr"
+                  f"{'y' if removed == 1 else 'ies'} from {baseline}")
+        elif fail_stale and result.stale:
+            ok = False
+            print(f"FAIL: {len(result.stale)} stale baseline entr"
+                  f"{'y' if len(result.stale) == 1 else 'ies'} "
+                  "(--fail-stale; shrink the allowlist with --prune-stale)",
+                  file=sys.stderr)
     else:
         lint.print_findings(current)
         ok = not current
 
     if json_path:
         F.dump_report(json_path, ast_findings, jaxpr_findings,
-                      jaxpr_meta=meta, result=result)
+                      kernel_findings, jaxpr_meta=meta, result=result)
         print(f"report written to {json_path}")
 
-    if not ok:
+    if result is not None and not result.ok:
         print("FAIL: new registry escapes (route through qmatmul/qdiv/"
-              "qsoftmax_div/qrms_div, mark '# audit: exact — reason', or "
-              "regenerate the baseline if intentional)", file=sys.stderr)
+              "qsoftmax_div/qrms_div, mark '# audit: exact — reason', fix "
+              "the kernel geometry, or regenerate the baseline if "
+              "intentional)", file=sys.stderr)
+    elif not ok and not baseline:
+        print("FAIL: findings with no baseline to ratchet against",
+              file=sys.stderr)
     return (0 if ok else 1), current, meta
 
 
@@ -71,17 +119,36 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="RAPID dispatch-coverage audit (AST lint + jaxpr "
-                    "entry-point census)")
+                    "entry-point census + kernel geometry)")
     ap.add_argument("--json", default="", metavar="PATH",
-                    help="write the merged two-layer JSON report")
+                    help="write the merged three-layer JSON report")
     ap.add_argument("--baseline", default="", metavar="PATH",
                     help="ratchet against this committed baseline")
     ap.add_argument("--entries", default="",
                     help="comma-separated jaxpr entry subset (default all)")
+    ap.add_argument("--layers", default=",".join(ALL_LAYERS),
+                    help="comma-separated layer subset "
+                         f"(default {','.join(ALL_LAYERS)})")
+    ap.add_argument("--pipeline-report", default="", metavar="PATH",
+                    help="write the kernel pipeline-legality report JSON")
+    ap.add_argument("--fail-stale", action="store_true",
+                    help="exit nonzero on stale baseline entries instead of "
+                         "warning (CI mode)")
+    ap.add_argument("--prune-stale", action="store_true",
+                    help="rewrite the baseline without stale entries")
     args = ap.parse_args(argv)
+    layers = tuple(x for x in args.layers.split(",") if x)
+    bad = [x for x in layers if x not in ALL_LAYERS]
+    if bad:
+        ap.error(f"unknown layer(s) {bad}; pick from {ALL_LAYERS}")
+    if args.prune_stale and not args.baseline:
+        ap.error("--prune-stale needs --baseline")
     rc, _, _ = run_combined(
         entries=[n for n in args.entries.split(",") if n] or None,
-        baseline=args.baseline or None, json_path=args.json or None)
+        baseline=args.baseline or None, json_path=args.json or None,
+        layers=layers, fail_stale=args.fail_stale,
+        prune_stale=args.prune_stale,
+        pipeline_report=args.pipeline_report or None)
     return rc
 
 

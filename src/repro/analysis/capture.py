@@ -1,0 +1,198 @@
+"""Pallas-call capture shim: record kernel geometry with no TPU.
+
+:func:`capture_pallas_calls` monkeypatches
+``jax.experimental.pallas.pallas_call`` with a fake that never builds a
+kernel: it records the call's grid, BlockSpecs (block shape + index
+map), operand/result shapes and dtypes, and the Mosaic
+``dimension_semantics``, then returns zeros of the declared out shapes.
+The kernel-family wrappers (``log_matmul``, ``fused_*_div``,
+``rapid_mul``/``rapid_div``) run unmodified on any host and the
+geometry auditor (``repro.analysis.kernel_audit``) checks the captured
+calls statically.
+
+Two sharp edges the shim handles:
+
+* **jit-cache pollution.**  The public wrappers are ``jax.jit``-ed; if
+  a fake traced under them entered the jit cache, later *real* calls at
+  the same shapes would replay the fake and return zeros.  The context
+  manager therefore runs everything under ``jax.disable_jit()`` — the
+  wrappers execute eagerly and the cache is never consulted or filled.
+* **interpret mode drops geometry.**  The wrappers pass
+  ``compiler_params=None`` when interpreting on CPU; audit drivers must
+  call them with ``interpret=False`` (the fake never compiles anything,
+  so this is safe off-TPU) to capture the real ``dimension_semantics``.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+__all__ = ["SpecInfo", "CapturedCall", "capture_pallas_calls"]
+
+
+@dataclass
+class SpecInfo:
+    """One operand/result of a captured ``pallas_call``."""
+
+    name: str                       # in0/in1/... or out0/out1/...
+    shape: Tuple[int, ...]          # full (padded) array shape
+    dtype: str
+    itemsize: int
+    block_shape: Optional[Tuple[int, ...]]  # None: whole-array default
+    index_map: Optional[Callable]           # None: whole-array default
+
+    def block(self) -> Tuple[int, ...]:
+        """Block shape with the whole-array default made explicit."""
+        if self.block_shape is None:
+            return tuple(self.shape)
+        # a None entry in a block shape means "whole dim" in pallas
+        return tuple(
+            int(s if b is None else b)
+            for b, s in zip(self.block_shape, self.shape)
+        )
+
+    def map_index(self, *grid_idx: int) -> Tuple[int, ...]:
+        """Evaluate the index map at a grid point (python ints in/out)."""
+        if self.index_map is None:
+            return tuple(0 for _ in self.shape)
+        out = self.index_map(*grid_idx)
+        if not isinstance(out, tuple):
+            out = (out,)
+        return tuple(int(v) for v in out)
+
+
+@dataclass
+class CapturedCall:
+    """Geometry of one ``pallas_call`` as issued by a kernel wrapper."""
+
+    kernel: Callable                     # as passed (possibly a partial)
+    kernel_name: str
+    kernel_file: str
+    kernel_kwargs: dict                  # merged functools.partial keywords
+    grid: Tuple[int, ...]
+    in_specs: List[SpecInfo] = field(default_factory=list)
+    out_specs: List[SpecInfo] = field(default_factory=list)
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+    input_output_aliases: Any = None
+    interpret: bool = False
+    out_is_list: bool = False
+
+    def operands(self) -> List[SpecInfo]:
+        return list(self.in_specs) + list(self.out_specs)
+
+
+def _unwrap_kernel(kernel: Callable) -> Tuple[Callable, dict]:
+    kwargs: dict = {}
+    fn = kernel
+    while isinstance(fn, functools.partial):
+        kwargs.update(fn.keywords or {})
+        fn = fn.func
+    return fn, kwargs
+
+
+def _spec_fields(spec) -> Tuple[Optional[tuple], Optional[Callable]]:
+    if spec is None:
+        return None, None
+    return getattr(spec, "block_shape", None), getattr(spec, "index_map", None)
+
+
+def _dimension_semantics(compiler_params) -> Optional[Tuple[str, ...]]:
+    if compiler_params is None:
+        return None
+    if isinstance(compiler_params, dict):
+        mosaic = compiler_params.get("mosaic", compiler_params)
+        if isinstance(mosaic, dict):
+            sem = mosaic.get("dimension_semantics")
+        else:
+            sem = getattr(mosaic, "dimension_semantics", None)
+    else:
+        sem = getattr(compiler_params, "dimension_semantics", None)
+    return tuple(sem) if sem is not None else None
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Context manager yielding a list filled with :class:`CapturedCall`.
+
+    Inside the block every ``pl.pallas_call`` records its geometry and
+    returns zeros; jit is disabled so nothing fake is cached.  Use::
+
+        with capture_pallas_calls() as calls:
+            log_matmul(x, w, "rapid10", interpret=False)
+        grid = calls[0].grid
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    captured: List[CapturedCall] = []
+    real_pallas_call = pl.pallas_call
+
+    def shim(kernel, *, grid=None, in_specs=None, out_specs=None,
+             out_shape=None, compiler_params=None, interpret=False,
+             input_output_aliases=None, **_ignored):
+        fn, kkwargs = _unwrap_kernel(kernel)
+        try:
+            kernel_file = inspect.getsourcefile(fn) or "<unknown>"
+        except TypeError:  # builtins / C callables
+            kernel_file = "<unknown>"
+        out_is_list = isinstance(out_shape, (list, tuple))
+        out_shapes = _as_list(out_shape)
+        out_spec_list = _as_list(out_specs)
+
+        def runner(*operands):
+            in_spec_list = _as_list(in_specs)
+            if len(in_spec_list) < len(operands):
+                in_spec_list += [None] * (len(operands) - len(in_spec_list))
+            call = CapturedCall(
+                kernel=kernel,
+                kernel_name=getattr(fn, "__qualname__", repr(fn)),
+                kernel_file=kernel_file,
+                kernel_kwargs=kkwargs,
+                grid=tuple(int(g) for g in (grid or ())),
+                dimension_semantics=_dimension_semantics(compiler_params),
+                input_output_aliases=input_output_aliases,
+                interpret=bool(interpret),
+                out_is_list=out_is_list,
+            )
+            for i, (op, spec) in enumerate(zip(operands, in_spec_list)):
+                bs, imap = _spec_fields(spec)
+                call.in_specs.append(SpecInfo(
+                    name=f"in{i}", shape=tuple(op.shape), dtype=str(op.dtype),
+                    itemsize=int(op.dtype.itemsize),
+                    block_shape=tuple(bs) if bs is not None else None,
+                    index_map=imap,
+                ))
+            specs = list(out_spec_list) + [None] * (
+                len(out_shapes) - len(out_spec_list))
+            for i, (sd, spec) in enumerate(zip(out_shapes, specs)):
+                bs, imap = _spec_fields(spec)
+                call.out_specs.append(SpecInfo(
+                    name=f"out{i}", shape=tuple(sd.shape), dtype=str(sd.dtype),
+                    itemsize=int(jnp.dtype(sd.dtype).itemsize),
+                    block_shape=tuple(bs) if bs is not None else None,
+                    index_map=imap,
+                ))
+            captured.append(call)
+            zeros = [jnp.zeros(sd.shape, sd.dtype) for sd in out_shapes]
+            return tuple(zeros) if out_is_list else zeros[0]
+
+        return runner
+
+    with jax.disable_jit():
+        pl.pallas_call = shim
+        try:
+            yield captured
+        finally:
+            pl.pallas_call = real_pallas_call

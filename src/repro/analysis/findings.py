@@ -27,6 +27,12 @@ code do not churn the baseline:
     differently) to ratchet on, but a dot_general/div escaping in a
     file that had none is always a failure.  Count *increases* within
     an existing key are reported as warnings.
+  * kernel findings (layer 3, ``repro.analysis.kernel_audit``) key on
+    ``(rule, entry, primitive)`` where ``entry`` is the audited kernel
+    variant id (``family/shape_class``) and ``primitive`` the operand
+    label (``in0``/``out0``/``kernel``) — geometry is derived from
+    BlockSpecs, identical on every jax pin, so the key carries no
+    file/line at all.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ __all__ = [
     "compare",
     "load_baseline",
     "dump_report",
+    "prune_stale",
     "findings_from_dicts",
 ]
 
@@ -55,25 +62,29 @@ UNATTRIBUTED = "<unattributed>"
 class Finding:
     """One registry-bypassing operation (either audit layer)."""
 
-    layer: str            # "ast" | "jaxpr"
-    rule: str             # RPD001..RPD004 (ast) | "escape" (jaxpr)
+    layer: str            # "ast" | "jaxpr" | "kernel"
+    rule: str             # RPD001..004 (ast) | "escape" (jaxpr) | RPD005..008
     file: str             # repo-relative path (or UNATTRIBUTED)
     line: int             # 1-based; informative only, not part of the key
     msg: str              # human-readable description
     code: str = ""        # stripped source line (ast layer)
-    entry: str = ""       # traced entry-point name (jaxpr layer)
-    primitive: str = ""   # jax primitive name (jaxpr layer)
+    entry: str = ""       # entry point (jaxpr) | kernel variant id (kernel)
+    primitive: str = ""   # jax primitive (jaxpr) | operand label (kernel)
     count: int = 1        # occurrences under this key (jaxpr layer)
 
     def key(self) -> Tuple[str, ...]:
         if self.layer == "ast":
             return ("ast", self.rule, self.file, self.code)
+        if self.layer == "kernel":
+            return ("kernel", self.rule, self.entry, self.primitive)
         return ("jaxpr", self.entry, self.primitive, self.file)
 
     def where(self) -> str:
         loc = f"{self.file}:{self.line}" if self.line else self.file
         if self.layer == "jaxpr":
             return f"{self.entry}: {self.primitive} @ {loc}"
+        if self.layer == "kernel":
+            return f"{self.entry}: {self.primitive} ({self.file})"
         return loc
 
 
@@ -147,26 +158,35 @@ def compare(current: List[Finding], baseline: List[Finding]) -> CompareResult:
     return res
 
 
+#: baseline/report arrays, one per audit layer
+LAYER_SECTIONS = ("ast", "jaxpr", "kernel")
+
+
 def load_baseline(path: str) -> List[Finding]:
     with open(path) as fh:
         data = json.load(fh)
-    return findings_from_dicts(data.get("ast", []) + data.get("jaxpr", []))
+    items: List[dict] = []
+    for section in LAYER_SECTIONS:
+        items += data.get(section, [])
+    return findings_from_dicts(items)
 
 
 def dump_report(path: str, ast_findings: List[Finding],
                 jaxpr_findings: List[Finding],
+                kernel_findings: Optional[List[Finding]] = None,
                 jaxpr_meta: Optional[dict] = None,
                 result: Optional[CompareResult] = None) -> dict:
-    """Write the merged two-layer JSON report (also the baseline format).
+    """Write the merged three-layer JSON report (also the baseline format).
 
     A report file doubles as a baseline: ``load_baseline`` reads the
-    same ``ast`` / ``jaxpr`` arrays, so regenerating the allowlist is
-    ``python -m repro.analysis --json AUDIT_baseline.json``.
+    same ``ast`` / ``jaxpr`` / ``kernel`` arrays, so regenerating the
+    allowlist is ``python -m repro.analysis --json AUDIT_baseline.json``.
     """
     doc: dict = {
         "version": 1,
         "ast": [asdict(f) for f in ast_findings],
         "jaxpr": [asdict(f) for f in jaxpr_findings],
+        "kernel": [asdict(f) for f in (kernel_findings or [])],
     }
     if jaxpr_meta is not None:
         doc["jaxpr_meta"] = jaxpr_meta
@@ -182,3 +202,38 @@ def dump_report(path: str, ast_findings: List[Finding],
             json.dump(doc, fh, indent=2, sort_keys=False)
             fh.write("\n")
     return doc
+
+
+def prune_stale(path: str, current: List[Finding]) -> int:
+    """Drop baseline entries with no matching current finding, in place.
+
+    The mechanical arm of the ratchet's stale warning: after a PR fixes
+    an allowlisted escape, ``python -m repro.analysis --baseline
+    AUDIT_baseline.json --prune-stale`` rewrites the baseline without
+    the fixed entries (multiset semantics — with two identical
+    allowlisted lines and one fixed, one entry survives).  Sections
+    other than the per-layer finding arrays (``jaxpr_meta`` etc.) are
+    preserved.  Returns the number of entries removed.
+    """
+    with open(path) as fh:
+        data = json.load(fh)
+    baseline = load_baseline(path)
+    stale = Counter(f.key() for f in compare(current, baseline).stale)
+    removed = 0
+    for section in LAYER_SECTIONS:
+        kept: List[dict] = []
+        for item in data.get(section, []):
+            (f,) = findings_from_dicts([item])
+            k = f.key()
+            if stale[k] > 0:
+                stale[k] -= 1
+                removed += 1
+            else:
+                kept.append(item)
+        if section in data:
+            data[section] = kept
+    if removed:
+        with open(path, "w") as fh:
+            json.dump(data, fh, indent=2, sort_keys=False)
+            fh.write("\n")
+    return removed

@@ -1,0 +1,603 @@
+"""Layer-3 audit: static geometry checks for every Pallas kernel family.
+
+The dispatch auditor (layers 1+2) proves mul/div *route through* the
+registry; this layer proves the kernels the registry dispatches are
+*geometrically legal* before they ever touch a TPU.  Every kernel
+family registered in ``core/backend.py`` — ``log_matmul`` (matmul),
+``fused_div`` (softmax/rms/eltwise/row-broadcast divides), plus the
+integer ``rapid_mul``/``rapid_div`` units — is driven through its
+public wrapper under the capture shim (:mod:`repro.analysis.capture`),
+and each captured ``pallas_call``'s grid/BlockSpec/index-map geometry
+is checked per shape class:
+
+  RPD005  VMEM working set: per-grid-step tile bytes (grid-varying
+          operands counted ``PIPELINE_BUFFERS`` times, grid-invariant
+          LUT constants once) against the explicit per-platform budget
+          in :mod:`repro.kernels.budget` — the same constants
+          ``_pick_blocks`` / ``_pick_bm`` derive block sizes from.
+  RPD006  tiling legality: block lane dim %128 (or == the array dim),
+          sublane dim %8, and blocks dividing the padded array dims so
+          no implicit tail padding sneaks in.
+  RPD007  tail coverage: index maps are surjective onto the padded
+          array's block grid and never map out of range — a
+          non-surjective map silently drops elements (the class of bug
+          the PR-4 K-tail fix patched by hand).
+  RPD008  write-aliasing races: an output tile revisited across a grid
+          dimension (the ``kk`` accumulation in ``log_matmul``) must be
+          written only by accumulation (``+=``) or under first/last-
+          visit ``pl.when`` guards, and the revisited dim must not be
+          declared "parallel".
+
+Alongside findings, the audit emits a **pipeline-legality report** per
+variant — grid, semantics, working set, revisit structure, and whether
+double-buffering is safe — the contract the upcoming software-
+pipelining PR must preserve (``PIPELINE_REPORT.json`` at the repo
+root).  Findings flow through the ``findings.compare`` ratchet into the
+``kernel`` section of ``AUDIT_baseline.json``.
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+import itertools
+import textwrap
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.capture import CapturedCall, SpecInfo, capture_pallas_calls
+from repro.analysis.findings import Finding
+from repro.analysis.rules import KERNEL_RULES  # noqa: F401  (re-export)
+from repro.kernels import budget
+
+__all__ = [
+    "KERNEL_RULES",
+    "KernelWrite",
+    "analyze_kernel_writes",
+    "audit_call",
+    "iter_variants",
+    "run_kernel_audit",
+    "registry_coverage",
+]
+
+
+# --------------------------------------------------------------------------
+# kernel-body write analysis (guards + accumulation discipline)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KernelGuard:
+    """One ``@pl.when(pl.program_id(dim) == value)`` context."""
+
+    dim: Optional[int]      # grid dim compared, None if unrecognised
+    value: Optional[int]    # comparison value, None if not evaluable
+
+
+@dataclass(frozen=True)
+class KernelWrite:
+    """One subscript store to a ``*_ref`` name inside a kernel body."""
+
+    target: str             # e.g. "o_ref"
+    kind: str               # "assign" (=) | "accum" (+=)
+    guards: Tuple[KernelGuard, ...]
+
+    def guarded_visit(self, dim: int, first: int, last: int) -> bool:
+        """Write only happens on the first or last visit along ``dim``."""
+        return any(g.dim == dim and g.value in (first, last)
+                   for g in self.guards)
+
+
+def _guard_from_decorator(dec: ast.expr, env: dict) -> Optional[KernelGuard]:
+    """Parse ``pl.when(pl.program_id(d) == expr)`` -> KernelGuard."""
+    if not (isinstance(dec, ast.Call) and isinstance(dec.func, ast.Attribute)
+            and dec.func.attr == "when" and dec.args):
+        return None
+    pred = dec.args[0]
+    if not (isinstance(pred, ast.Compare) and len(pred.ops) == 1
+            and isinstance(pred.ops[0], ast.Eq)):
+        return KernelGuard(dim=None, value=None)
+    sides = [pred.left, pred.comparators[0]]
+
+    def _program_id_dim(node) -> Optional[int]:
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "program_id" and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            return int(node.args[0].value)
+        return None
+
+    for a, b in (sides, sides[::-1]):
+        dim = _program_id_dim(a)
+        if dim is None:
+            continue
+        try:
+            value = eval(  # noqa: S307 - audited repo source, static ints
+                compile(ast.Expression(b), "<guard>", "eval"),
+                {"__builtins__": {}}, dict(env))
+            return KernelGuard(dim=dim, value=int(value))
+        except Exception:
+            return KernelGuard(dim=dim, value=None)
+    return KernelGuard(dim=None, value=None)
+
+
+def analyze_kernel_writes(kernel: Callable) -> Optional[List[KernelWrite]]:
+    """Classify every ``*_ref[...]`` store in a kernel body.
+
+    ``kernel`` may be a ``functools.partial``; its keywords become the
+    evaluation environment for guard predicates (so ``pl.program_id(2)
+    == nk - 1`` resolves to a concrete visit index).  Returns ``None``
+    when the source is unavailable — callers must treat that as
+    *unproven*, not clean.
+    """
+    fn, env = kernel, {}
+    while isinstance(fn, functools.partial):
+        env.update(fn.keywords or {})
+        fn = fn.func
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return None
+    writes: List[KernelWrite] = []
+
+    def ref_name(target) -> Optional[str]:
+        if (isinstance(target, ast.Subscript)
+                and isinstance(target.value, ast.Name)
+                and target.value.id.endswith("_ref")):
+            return target.value.id
+        return None
+
+    def walk(body, guards: Tuple[KernelGuard, ...]):
+        for node in body:
+            if isinstance(node, ast.FunctionDef):
+                extra = [g for g in
+                         (_guard_from_decorator(d, env)
+                          for d in node.decorator_list) if g is not None]
+                walk(node.body, guards + tuple(extra))
+                continue
+            if isinstance(node, ast.Assign):
+                targets = []
+                for t in node.targets:
+                    targets += t.elts if isinstance(t, ast.Tuple) else [t]
+                for t in targets:
+                    name = ref_name(t)
+                    if name:
+                        writes.append(KernelWrite(name, "assign", guards))
+            elif isinstance(node, ast.AugAssign):
+                name = ref_name(node.target)
+                if name:
+                    kind = "accum" if isinstance(node.op, ast.Add) else "assign"
+                    writes.append(KernelWrite(name, kind, guards))
+            for child_body in (getattr(node, "body", None),
+                               getattr(node, "orelse", None),
+                               getattr(node, "finalbody", None)):
+                if isinstance(child_body, list) and not isinstance(
+                        node, ast.FunctionDef):
+                    walk(child_body, guards)
+
+    for top in ast.walk(tree):
+        if isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walk(top.body, ())
+            break
+    return writes
+
+
+# --------------------------------------------------------------------------
+# geometry checks over one captured call
+# --------------------------------------------------------------------------
+
+def _grid_points(grid: Sequence[int]) -> List[Tuple[int, ...]]:
+    return list(itertools.product(*[range(g) for g in grid])) or [()]
+
+def _rel_file(path: str) -> str:
+    marker = "src/repro/"
+    i = path.replace("\\", "/").find(marker)
+    return path[i:] if i >= 0 else path
+
+
+def _block_grid(spec: SpecInfo) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """(block shape, number of blocks per dim) for one operand."""
+    blk = spec.block()
+    nblocks = tuple(-(-s // b) for s, b in zip(spec.shape, blk))
+    return blk, nblocks
+
+
+def audit_call(call: CapturedCall, variant: str, family: str,
+               platform: str = "tpu") -> Tuple[List[Finding], dict]:
+    """All four checks over one captured ``pallas_call`` geometry."""
+    findings: List[Finding] = []
+    file = _rel_file(call.kernel_file)
+
+    def emit(rule: str, operand: str, msg: str):
+        findings.append(Finding(
+            layer="kernel", rule=rule, file=file, line=0, msg=msg,
+            entry=variant, primitive=operand))
+
+    pts = _grid_points(call.grid)
+    visits: Dict[str, Dict[Tuple[int, ...], List[Tuple[int, ...]]]] = {}
+    operands = call.operands()
+    for spec in operands:
+        blk, nblocks = _block_grid(spec)
+
+        # RPD006: lane/sublane alignment + block divides the padded dim
+        if blk and not (blk[-1] % budget.LANE == 0
+                        or blk[-1] == spec.shape[-1]):
+            emit("RPD006", spec.name,
+                 f"lane dim {blk[-1]} of block {blk} is neither %"
+                 f"{budget.LANE} nor the full array dim {spec.shape[-1]}")
+        if len(blk) >= 2 and not (blk[-2] % budget.SUBLANE == 0
+                                  or blk[-2] == spec.shape[-2]):
+            emit("RPD006", spec.name,
+                 f"sublane dim {blk[-2]} of block {blk} is neither %"
+                 f"{budget.SUBLANE} nor the full array dim {spec.shape[-2]}")
+        for d, (s, b) in enumerate(zip(spec.shape, blk)):
+            if s % b:
+                emit("RPD006", spec.name,
+                     f"block dim {b} does not divide padded array dim {s} "
+                     f"(axis {d}): implicit tail block")
+
+        # RPD007: index map in range + surjective over the block grid
+        seen: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+        out_of_range = 0
+        for p in pts:
+            bidx = spec.map_index(*p)
+            if len(bidx) != len(spec.shape):
+                emit("RPD007", spec.name,
+                     f"index map arity {len(bidx)} != rank {len(spec.shape)}")
+                break
+            if any(not 0 <= i < nb for i, nb in zip(bidx, nblocks)):
+                out_of_range += 1
+                continue
+            seen.setdefault(bidx, []).append(p)
+        visits[spec.name] = seen
+        if out_of_range:
+            emit("RPD007", spec.name,
+                 f"index map leaves the array for {out_of_range}/{len(pts)} "
+                 "grid points")
+        total_blocks = 1
+        for nb in nblocks:
+            total_blocks *= nb
+        missing = [b for b in itertools.product(*[range(n) for n in nblocks])
+                   if b not in seen]
+        if missing:
+            emit("RPD007", spec.name,
+                 f"{len(missing)} of {total_blocks} blocks never visited "
+                 f"(first: {missing[0]}) — elements silently dropped")
+
+    # RPD005: per-grid-step VMEM working set vs the shared budget
+    working_set = 0
+    op_report = []
+    for spec in operands:
+        blk, _ = _block_grid(spec)
+        varying = len(visits.get(spec.name, {})) > 1
+        buffers = budget.PIPELINE_BUFFERS if varying else 1
+        nbytes = budget.tile_bytes(blk, spec.itemsize) * buffers
+        working_set += nbytes
+        op_report.append({
+            "name": spec.name, "shape": list(spec.shape),
+            "block": list(blk), "dtype": spec.dtype,
+            "grid_varying": varying, "vmem_bytes": nbytes,
+        })
+    vmem_budget = budget.vmem_budget(platform)
+    if working_set > vmem_budget:
+        emit("RPD005", "kernel",
+             f"working set {working_set} B (incl. double buffers) exceeds "
+             f"the {platform} budget {vmem_budget} B "
+             "(repro.kernels.budget.VMEM_BUDGET_BYTES)")
+
+    # RPD008: output revisits must be sequential + write-disciplined
+    revisit_dims: Dict[str, List[int]] = {}
+    for spec in call.out_specs:
+        dims = set()
+        for bidx, plist in visits.get(spec.name, {}).items():
+            if len(plist) > 1:
+                for d in range(len(call.grid)):
+                    if len({p[d] for p in plist}) > 1:
+                        dims.add(d)
+        revisit_dims[spec.name] = sorted(dims)
+    any_revisit = any(revisit_dims.values())
+    writes = analyze_kernel_writes(call.kernel) if any_revisit else []
+    discipline = "single-visit"
+    for spec in call.out_specs:
+        for d in revisit_dims[spec.name]:
+            sem = (call.dimension_semantics[d]
+                   if call.dimension_semantics else None)
+            if sem == "parallel":
+                emit("RPD008", spec.name,
+                     f"output revisited across grid dim {d} declared "
+                     "'parallel' — concurrent tile writes race")
+            if writes is None:
+                emit("RPD008", spec.name,
+                     "kernel source unavailable: cannot prove revisit write "
+                     "discipline")
+                discipline = "unproven"
+                continue
+            bad = [w for w in writes
+                   if w.kind == "assign"
+                   and not w.guarded_visit(d, 0, call.grid[d] - 1)]
+            if bad:
+                emit("RPD008", spec.name,
+                     f"plain '=' store to {bad[0].target} not guarded to the "
+                     f"first/last visit of revisited grid dim {d} "
+                     "(use accumulation or pl.when(program_id == 0 / nk-1))")
+                discipline = "raced"
+            elif discipline == "single-visit":
+                discipline = "accumulate+first/last-guard"
+
+    ds = list(call.dimension_semantics) if call.dimension_semantics else None
+    safe = not findings and call.input_output_aliases in (None, {}, ())
+    if safe:
+        reason = ("input tiles are pure functions of the grid index "
+                  "(prefetch for step t+1 never depends on step t's "
+                  "stores); outputs are "
+                  + ("revisited only along sequential dims with "
+                     "accumulate/first/last-guarded writes"
+                     if any_revisit else "written exactly once")
+                  + f"; 2x-buffered working set {working_set} B fits the "
+                  f"{vmem_budget} B budget")
+    else:
+        reason = ("; ".join(f"[{f.rule}] {f.msg}" for f in findings)
+                  or "input/output aliasing defeats independent prefetch")
+    report = {
+        "variant": variant,
+        "family": family,
+        "kernel": call.kernel_name,
+        "file": file,
+        "grid": list(call.grid),
+        "dimension_semantics": ds,
+        "operands": op_report,
+        "working_set_bytes": working_set,
+        "vmem_budget_bytes": vmem_budget,
+        "output_revisit_dims": revisit_dims,
+        "write_discipline": discipline,
+        "double_buffer_safe": safe,
+        "reason": reason,
+    }
+    return findings, report
+
+
+# --------------------------------------------------------------------------
+# variant enumeration: every registered kernel family x bench shape class
+# --------------------------------------------------------------------------
+
+#: audited kernel family -> registry family in core/backend.py (the int
+#: units have no registry row of their own; they are the faithful-port
+#: elementwise path behind the scheme zoo)
+REGISTRY_FAMILY = {
+    "log_matmul": "matmul",
+    "fused_softmax": "softmax_div",
+    "fused_rms": "rms_div",
+    "fused_div_eltwise": "div",
+    "fused_div_rowbcast": "div",
+    "rapid_mul": None,
+    "rapid_div": None,
+}
+
+
+def _drive_log_matmul(m, n, k, **kwargs):
+    import jax.numpy as jnp
+    from repro.kernels.log_matmul.ops import log_matmul
+    x = jnp.zeros((m, k), jnp.float32)
+    w = jnp.zeros((k, n), jnp.float32)
+    log_matmul(x, w, "rapid10", interpret=False, **kwargs)
+
+
+def _log_matmul_epilogues():
+    from repro.core.backend import Epilogue
+    import jax.numpy as jnp
+    return {
+        "plain": lambda n: {},
+        "bias_silu": lambda n: dict(bias=jnp.zeros((n,), jnp.float32),
+                                    activation="silu"),
+        "rms_keep_prenorm": lambda n: dict(
+            epilogue=Epilogue(norm="rms", div_scheme="rapid9",
+                              keep_prenorm=True),
+            residual=None),
+        "softmax": lambda n: dict(
+            epilogue=Epilogue(norm="softmax", div_scheme="rapid9")),
+    }
+
+
+def iter_variants() -> List[Tuple[str, str, Callable[[], None]]]:
+    """(variant_id, family, driver) for every family x shape class.
+
+    Shape classes mirror the bench sweep plus the degenerate cases the
+    block picker historically got wrong: K tails in (128, 512) not a
+    multiple of 128, M/N smaller than one tile, realistic model widths
+    that trigger the norm-epilogue slab rebalancing.
+    """
+    import jax.numpy as jnp
+
+    variants: List[Tuple[str, str, Callable[[], None]]] = []
+
+    matmul_shapes = {
+        "square512": (512, 512, 512),
+        "ktail130": (256, 256, 130),
+        "skinny_m4": (4, 512, 512),
+        "ntail300": (64, 300, 256),
+        # K > MAX_BK: the only class where output tiles are *revisited*
+        # across the sequential kk dim — the RPD008 race check is live
+        "deepk2048": (64, 256, 2048),
+    }
+    eps = _log_matmul_epilogues()
+    for sname, (m, n, k) in matmul_shapes.items():
+        variants.append((
+            f"log_matmul/{sname}/plain", "log_matmul",
+            functools.partial(_drive_log_matmul, m, n, k)))
+    for ename, mk in eps.items():
+        if ename == "plain":
+            continue
+        m, n, k = matmul_shapes["square512"]
+        kw = {k2: v for k2, v in mk(n).items() if v is not None}
+        variants.append((
+            f"log_matmul/square512/{ename}", "log_matmul",
+            functools.partial(_drive_log_matmul, m, n, k, **kw)))
+    # realistic MLP width: exercises the norm-epilogue VMEM rebalance
+    from repro.core.backend import Epilogue
+    variants.append((
+        "log_matmul/mlp128x4096/rms", "log_matmul",
+        functools.partial(
+            _drive_log_matmul, 128, 4096, 512,
+            epilogue=Epilogue(norm="rms", div_scheme="rapid9"))))
+
+    def drive_softmax(m, n):
+        from repro.kernels.fused_div.ops import fused_softmax_div
+        fused_softmax_div(jnp.zeros((m, n), jnp.float32), "rapid9",
+                          interpret=False)
+
+    def drive_rms(m, n):
+        from repro.kernels.fused_div.ops import fused_rms_div
+        fused_rms_div(jnp.zeros((m, n), jnp.float32), 1e-6, "rapid9",
+                      interpret=False)
+
+    def drive_eltwise(m, n):
+        from repro.kernels.fused_div.ops import fused_elementwise_div
+        fused_elementwise_div(jnp.zeros((m, n), jnp.float32),
+                              jnp.ones((m, n), jnp.float32), "rapid9",
+                              interpret=False)
+
+    def drive_rowbcast(m, n):
+        from repro.kernels.fused_div.ops import fused_elementwise_div
+        fused_elementwise_div(jnp.zeros((m, n), jnp.float32),
+                              jnp.ones((m, 1), jnp.float32), "rapid9",
+                              interpret=False)
+
+    variants += [
+        ("fused_softmax/rows64x1000", "fused_softmax",
+         functools.partial(drive_softmax, 64, 1000)),
+        ("fused_softmax/rows8x128", "fused_softmax",
+         functools.partial(drive_softmax, 8, 128)),
+        ("fused_rms/rows32x300", "fused_rms",
+         functools.partial(drive_rms, 32, 300)),
+        ("fused_div_eltwise/tiled16x256", "fused_div_eltwise",
+         functools.partial(drive_eltwise, 16, 256)),
+        # realistic online-softmax combine shape: bm (64) is neither a
+        # lane multiple nor the full row count, so the denominator must
+        # ride as a [M, 1] column block, not a 1-D (bm,) vector
+        ("fused_div_rowbcast/rows128x4096", "fused_div_rowbcast",
+         functools.partial(drive_rowbcast, 128, 4096)),
+    ]
+
+    def drive_rapid_mul():
+        from repro.kernels.rapid_mul.ops import rapid_mul
+        rapid_mul(jnp.arange(1000, dtype=jnp.uint32) % 997,
+                  jnp.arange(1000, dtype=jnp.uint32) % 991,
+                  "rapid10", n_bits=16, interpret=False)
+
+    def drive_rapid_div():
+        from repro.kernels.rapid_div.ops import rapid_div
+        rapid_div(jnp.arange(513, dtype=jnp.uint32) % 255 + 1,
+                  jnp.arange(513, dtype=jnp.uint32) % 15 + 1,
+                  "rapid9", n_bits=8, interpret=False)
+
+    variants += [
+        ("rapid_mul/flat1000_16bit", "rapid_mul", drive_rapid_mul),
+        ("rapid_div/flat513_8bit", "rapid_div", drive_rapid_div),
+    ]
+    return variants
+
+
+def registry_coverage() -> Dict[str, List[str]]:
+    """registry family (core/backend.py) -> audited kernel families."""
+    from repro.core.backend import dispatch_signature
+    cover: Dict[str, List[str]] = {
+        fam: [] for fam in dispatch_signature("pallas")}
+    for kfam, rfam in REGISTRY_FAMILY.items():
+        if rfam in cover:
+            cover[rfam].append(kfam)
+    return cover
+
+
+def run_kernel_audit(variants: Optional[Iterable[str]] = None,
+                     platform: str = "tpu"
+                     ) -> Tuple[List[Finding], List[dict]]:
+    """Capture + audit every kernel variant; (findings, report entries).
+
+    Also fails (RPD007 on the pseudo-operand ``registry``) if a family
+    registered in ``core/backend.py`` has no audited variant at all —
+    new registry families must grow audit coverage in the same PR.
+    """
+    wanted = set(variants) if variants else None
+    findings: List[Finding] = []
+    reports: List[dict] = []
+    audited_families = set()
+    for vid, family, drive in iter_variants():
+        if wanted and vid not in wanted:
+            continue
+        audited_families.add(family)
+        with capture_pallas_calls() as calls:
+            drive()
+        if not calls:
+            findings.append(Finding(
+                layer="kernel", rule="RPD007", file="", line=0,
+                msg="driver issued no pallas_call (wrapper rerouted off the "
+                    "kernel path?)", entry=vid, primitive="kernel"))
+            continue
+        for i, call in enumerate(calls):
+            label = vid if len(calls) == 1 else f"{vid}#{i}"
+            f, rep = audit_call(call, label, family, platform)
+            findings += f
+            reports.append(rep)
+    if wanted is None:
+        for rfam, kfams in registry_coverage().items():
+            if not any(k in audited_families for k in kfams):
+                findings.append(Finding(
+                    layer="kernel", rule="RPD007", file="", line=0,
+                    msg=f"registry family {rfam!r} has no audited kernel "
+                        "variant", entry="registry", primitive=rfam))
+    return findings, reports
+
+
+def pipeline_report_doc(reports: List[dict]) -> dict:
+    """The committed PIPELINE_REPORT.json document."""
+    return {
+        "version": 1,
+        "contract": (
+            "Per-kernel pipeline legality, derived statically from "
+            "captured pallas_call geometry.  The software-pipelining PR "
+            "must preserve every double_buffer_safe=true row: keep input "
+            "index maps pure functions of the grid index, keep output "
+            "revisits on sequential dims with accumulate/first/last-"
+            "guarded writes, and stay inside vmem_budget_bytes with "
+            "PIPELINE_BUFFERS-deep buffering."),
+        "kernels": reports,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kernel_audit",
+        description="Static Pallas kernel geometry audit (layer 3)")
+    ap.add_argument("--variants", default="",
+                    help="comma-separated variant-id subset (default all)")
+    ap.add_argument("--report", default="", metavar="PATH",
+                    help="write the pipeline-legality report JSON")
+    ap.add_argument("--list-variants", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_variants:
+        for vid, family, _ in iter_variants():
+            print(f"{vid}  [{family}]")
+        return 0
+    wanted = [v for v in args.variants.split(",") if v] or None
+    findings, reports = run_kernel_audit(wanted)
+    for rep in reports:
+        mark = "ok " if rep["double_buffer_safe"] else "FAIL"
+        print(f"{mark} {rep['variant']}: grid={tuple(rep['grid'])} "
+              f"ws={rep['working_set_bytes']}B "
+              f"discipline={rep['write_discipline']}")
+    for f in findings:
+        print(f"FINDING [{f.rule}] {f.where()}: {f.msg}")
+    if args.report:
+        with open(args.report, "w") as fh:
+            json.dump(pipeline_report_doc(reports), fh, indent=2)
+            fh.write("\n")
+        print(f"pipeline report written to {args.report}")
+    print(f"{len(reports)} kernel variants audited, "
+          f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

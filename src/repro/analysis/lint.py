@@ -56,6 +56,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.list_rules:
         for rule, desc in rules.RULES.items():
             print(f"{rule}  {desc}")
+        # layer-3 kernel-geometry rules (checked by repro.analysis.
+        # kernel_audit over captured pallas_call geometry, not source)
+        for rule, desc in rules.KERNEL_RULES.items():
+            print(f"{rule}  {desc}  [kernel layer]")
         return 0
 
     found = run_lint(args.root)

@@ -43,6 +43,7 @@ from repro.analysis.findings import Finding
 
 __all__ = [
     "RULES",
+    "KERNEL_RULES",
     "MARKER_RE",
     "lint_source",
     "lint_file",
@@ -59,6 +60,22 @@ RULES = {
               "mitchell.lut_host/lut_device at trace-constant level)",
     "RPD004": "literal backend string at a call site (use "
               "ApproxConfig.backend_for(site))",
+}
+
+# Layer-3 kernel-geometry rules (RPD005+), checked by
+# ``repro.analysis.kernel_audit`` over captured ``pallas_call`` geometry
+# rather than source text.  Kept here (pure data, no jax import) so
+# ``python -m repro.analysis.lint --list-rules`` prints the whole rule
+# space in one place.
+KERNEL_RULES = {
+    "RPD005": "VMEM working set over budget (per-grid-step tiles x "
+              "pipeline buffers vs repro.kernels.budget.VMEM_BUDGET_BYTES)",
+    "RPD006": "tiling misalignment (block lane dim not %128 / sublane dim "
+              "not %8, or block does not divide the padded array dim)",
+    "RPD007": "non-surjective index map (grid never visits a block, or "
+              "maps outside the array — elements silently dropped)",
+    "RPD008": "write-aliasing race (output tile revisited across a grid "
+              "dim without accumulate/first/last-visit guarded writes)",
 }
 
 # package sub-dirs (zones) each rule applies to; None = every zone

@@ -49,10 +49,12 @@ def _div_kernel(a_ref, b_ref, lut_ref, o_ref):
 
 
 def _div_rowbcast_kernel(a_ref, b_ref, lut_ref, o_ref):
-    # b is one denominator per row, broadcast over the lanes in VMEM —
-    # the [M, N] / [M, 1] shape of the online-softmax combine without
-    # ever materialising the broadcast in HBM
-    o_ref[...] = fa.log_div_f32(a_ref[...], b_ref[...][:, None], lut_ref[...])
+    # b is one denominator per row as a [bm, 1] column block (a 1-D
+    # (bm,) block puts bm on the lane axis, where it is misaligned for
+    # any bm that is neither %128 nor the whole row count — RPD006),
+    # broadcast over the lanes in VMEM: the [M, N] / [M, 1] shape of the
+    # online-softmax combine without materialising the broadcast in HBM
+    o_ref[...] = fa.log_div_f32(a_ref[...], b_ref[...], lut_ref[...])
 
 
 def _rowwise_call(kernel, x, lut, bm: int, interpret: bool):
@@ -96,14 +98,14 @@ def rms_div_pallas(x, lut, *, n: int, eps: float, bm: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def div_rowbcast_pallas(a, b, lut, *, bm: int = 8, interpret: bool = False):
-    """a[M, n_pad] / b[M] with the per-row denominator broadcast in VMEM."""
+    """a[M, n_pad] / b[M, 1] with the per-row denominator broadcast in VMEM."""
     m, npad = a.shape
     return pl.pallas_call(
         _div_rowbcast_kernel,
         grid=(m // bm,),
         in_specs=[
             pl.BlockSpec((bm, npad), lambda i: (i, 0)),
-            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
             pl.BlockSpec((256,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, npad), lambda i: (i, 0)),

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import float_approx as fa
+from repro.kernels import budget
 from repro.kernels.fused_div import ref
 from repro.kernels.fused_div.fused_div import (
     div_pallas,
@@ -25,11 +26,17 @@ __all__ = ["fused_softmax_div", "fused_rms_div", "fused_elementwise_div"]
 
 
 def _pick_bm(m: int, npad: int) -> int:
-    """Rows per grid step: >= the f32 sublane tile (8), capped so the
-    in/out slabs stay well under VMEM (~1 MiB of f32 per operand)."""
-    cap = max(8, ((1 << 18) // npad) // 8 * 8)
-    rows = -(-m // 8) * 8
-    return max(8, min(256, cap, rows))
+    """Rows per grid step: >= the f32 sublane tile, capped so the in/out
+    slabs stay under ``budget.ROW_SLAB_BYTES`` each — the same constants
+    the static kernel auditor (RPD005) enforces."""
+    rows = budget.round_up(m, budget.SUBLANE)
+    bm = max(budget.SUBLANE,
+             min(budget.MAX_BM, budget.slab_rows(npad), rows))
+    # in + out slabs double-buffered, LUT single-buffered
+    budget.check_working_set(
+        2 * budget.PIPELINE_BUFFERS * budget.tile_bytes((bm, npad))
+        + budget.tile_bytes((256,)))
+    return bm
 
 
 def _default_interpret(interpret: bool | None) -> bool:
@@ -93,8 +100,10 @@ def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str, *,
                 and (b.ndim == 0 or b.shape[-1] == 1))
     if rowbcast:
         ap, bm, m, n, lead = _as_rows(a)
-        bv = jnp.broadcast_to(b, (*a.shape[:-1], 1)).reshape(-1)
-        bv = jnp.pad(bv.astype(jnp.float32), (0, ap.shape[0] - m),
+        # [M_pad, 1] column: the denominator's row count lives on the
+        # sublane axis where bm-alignment holds (see _div_rowbcast_kernel)
+        bv = jnp.broadcast_to(b, (*a.shape[:-1], 1)).reshape(-1, 1)
+        bv = jnp.pad(bv.astype(jnp.float32), ((0, ap.shape[0] - m), (0, 0)),
                      constant_values=1.0)
         out = div_rowbcast_pallas(ap, bv, lut, bm=bm, interpret=interpret)
         return out[:m, :n].reshape(*lead, n).astype(orig)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import float_approx as fa
 from repro.core.backend import Epilogue, as_epilogue
+from repro.kernels import budget
 from repro.kernels.fused_div import ref as fdref
 from repro.kernels.log_matmul.log_matmul import log_matmul_pallas
 
@@ -13,20 +14,42 @@ __all__ = ["log_matmul"]
 
 
 def _pick_blocks(m: int, n: int, k: int):
-    """Choose hardware-aligned block sizes that fit comfortably in VMEM.
+    """Choose hardware-aligned block sizes that fit the VMEM budget.
 
     Every block is clamped to the problem size *rounded up to the
-    minimum tile* (8 sublanes x 128 lanes for f32): degenerate dims
-    smaller than a tile used to leak through as unaligned block shapes,
-    and a K dim between 128 and 512 that was not a multiple of the
-    unroll factor silently dropped its tail elements
-    (``bk // unroll`` truncated — the smoke-mode shapes exposed this).
-    Keeping bk a multiple of 128 keeps it a multiple of any unroll <= 8.
+    minimum tile* (``budget.SUBLANE`` x ``budget.LANE`` for f32):
+    degenerate dims smaller than a tile used to leak through as
+    unaligned block shapes, and a K dim between 128 and 512 that was
+    not a multiple of the unroll factor silently dropped its tail
+    elements (``bk // unroll`` truncated — the smoke-mode shapes
+    exposed this).  Keeping bk a multiple of 128 keeps it a multiple of
+    any unroll <= 8.  All caps come from :mod:`repro.kernels.budget` —
+    the same constants the static kernel auditor (RPD005/RPD006)
+    enforces over the captured BlockSpecs.
     """
-    bm = min(256, -(-m // 8) * 8)
-    bn = min(256, -(-n // 128) * 128)
-    bk = min(512, -(-k // 128) * 128)
+    bm = min(budget.MAX_BM, budget.round_up(m, budget.SUBLANE))
+    bn = min(budget.MAX_BN, budget.round_up(n, budget.LANE))
+    bk = min(budget.MAX_BK, budget.round_up(k, budget.LANE))
     return bm, bn, bk
+
+
+def _check_budget(bm: int, bn: int, bk: int, ep: Epilogue,
+                  has_bias: bool, has_residual: bool) -> None:
+    """Fail an oversized block choice (explicit ``blocks=`` included)
+    at call time with the same constant the auditor ratchets on."""
+    tiles = [(bm, bk), (bk, bn), (bm, bn)]            # x, w, out
+    if has_residual:
+        tiles.append((bm, bn))
+    if ep.keep_prenorm:
+        tiles.append((bm, bn))
+    working = sum(budget.PIPELINE_BUFFERS * budget.tile_bytes(t)
+                  for t in tiles)
+    working += budget.tile_bytes((256,))              # mul LUT
+    if has_bias:
+        working += budget.PIPELINE_BUFFERS * budget.tile_bytes((bn,))
+    if ep.wants_norm_lut:
+        working += budget.tile_bytes((256,))
+    budget.check_working_set(working)
 
 
 def log_matmul(
@@ -61,11 +84,12 @@ def log_matmul(
     if ep.norm is not None:
         # whole lane-padded rows per output tile (canonical denominator
         # semantics); rebalance bm/bk so the VMEM working set stays
-        # bounded when N is a real model width — <= 1 MiB of f32 per
-        # bm-row slab (out / pre / residual) and <= 2 MiB for the w slab
+        # bounded when N is a real model width — <= ROW_SLAB_BYTES per
+        # bm-row slab (out / pre / residual), <= W_SLAB_BYTES for w
         bn = fdref.padded_width(n)
-        bm = max(8, min(bm, ((1 << 18) // bn) // 8 * 8))
-        bk = max(128, min(bk, ((1 << 19) // bn) // 128 * 128))
+        bm = max(budget.SUBLANE, min(bm, budget.slab_rows(bn)))
+        bk = max(budget.LANE, min(bk, budget.slab_depth(bn)))
+    _check_budget(bm, bn, bk, ep, bias is not None, residual is not None)
     unroll = 8 if bk % 8 == 0 else 1
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))

@@ -1,10 +1,12 @@
 """Operator CLI: dispatch-coverage audit with optional HLO cross-check.
 
-``python -m repro.launch.audit`` wraps the two-layer auditor
+``python -m repro.launch.audit`` wraps the three-layer auditor
 (``repro.analysis``) for operators who want one command that
 
-  * runs the AST lint + jaxpr census against ``AUDIT_baseline.json``
-    (auto-detected at the repo root when ``--baseline`` is omitted), and
+  * runs the AST lint + jaxpr census + kernel geometry audit against
+    ``AUDIT_baseline.json`` (auto-detected at the repo root when
+    ``--baseline`` is omitted), optionally writing the kernel
+    pipeline-legality report (``--pipeline-report path``), and
   * optionally cross-checks a dumped HLO module (``--hlo path``): the
     jaxpr census counts dot/div *equations*; ``count_ops`` counts the
     ``dot`` / ``divide`` instructions XLA actually emitted.  A compiled
@@ -70,13 +72,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write the merged JSON report")
     ap.add_argument("--hlo", default="", metavar="PATH",
                     help="dumped HLO text to cross-check against")
+    ap.add_argument("--pipeline-report", default="", metavar="PATH",
+                    help="write the kernel pipeline-legality report JSON")
+    ap.add_argument("--fail-stale", action="store_true",
+                    help="exit nonzero on stale baseline entries")
+    ap.add_argument("--prune-stale", action="store_true",
+                    help="rewrite the baseline without stale entries")
     args = ap.parse_args(argv)
 
     from repro.analysis.__main__ import run_combined
 
     rc, _, jaxpr_meta = run_combined(
         entries=[n for n in args.entries.split(",") if n] or None,
-        baseline=args.baseline or None, json_path=args.json or None)
+        baseline=args.baseline or None, json_path=args.json or None,
+        fail_stale=args.fail_stale, prune_stale=args.prune_stale,
+        pipeline_report=args.pipeline_report or None)
 
     if args.hlo:
         hlo_text = Path(args.hlo).read_text()

@@ -296,11 +296,17 @@ class Model:
         tgt = batch["targets"]
         # align: logits predict the *next* token at each position
         logits = logits[:, -tgt.shape[1]:]  # drop patch positions (vlm)
+        # the logsumexp VJP's softmax divide is grad-of-loss math, not a
+        # datapath op the paper's divider replaces
+        # audit: exact — logsumexp on the scalar-loss path
         lse = jax.nn.logsumexp(logits, axis=-1)
         picked = jnp.take_along_axis(
             logits, jnp.maximum(tgt, 0)[..., None], axis=-1)[..., 0]
         nll = lse - picked
         mask = (tgt >= 0).astype(jnp.float32)
+        # one divide per step (+ its VJP), not a datapath op the
+        # paper's divider replaces
+        # audit: exact — scalar loss mean
         return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
     # ------------------------------------------------------------------

@@ -31,11 +31,25 @@ from repro.compat import shard_map
 
 from repro.configs.base import ApproxConfig, ModelConfig
 from repro.core import backend as be
-from repro.core.ops import qmatmul_batched
+from repro.core.ops import approx_softmax, exact_einsum, qmatmul_batched
 from repro.models.layers import ParallelCtx, mlp, mlp_params
 from repro.models.params import P
 
 __all__ = ["moe_params", "moe_ffn"]
+
+
+def _router_gates(gval: jnp.ndarray,
+                  acfg: Optional[ApproxConfig]) -> jnp.ndarray:
+    """Top-k gate normalisation through the registry softmax path.
+
+    The same site semantics as attention: an approx config carrying a
+    softmax divider routes the gates through the ``softmax_div`` family
+    (the last allowlisted router escape in the jaxpr audit); the exact
+    arm of ``approx_softmax`` is bit-identical to ``jax.nn.softmax``.
+    """
+    sch = acfg.div("softmax") if acfg is not None else None
+    bk = acfg.backend_for("softmax") if acfg is not None else None
+    return approx_softmax(gval, axis=-1, div_scheme=sch, backend=bk)
 
 
 def moe_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
@@ -108,16 +122,20 @@ def _route_and_compute(tokens, router_w, w1, w3, w2, *, n_experts: int,
     """
     T, D = tokens.shape
     e_loc = w1.shape[0]
-    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32), router_w)
+    # routing logits stay exact (top_k stability over tiny [T, E] work),
+    # declared through the audited wrapper; the gate normalisation runs
+    # through the registry's softmax_div family like every other softmax
+    logits = exact_einsum("td,de->te", tokens.astype(jnp.float32), router_w)
     gval, gidx = jax.lax.top_k(logits, k)  # [T, k]
-    gates = jax.nn.softmax(gval, axis=-1)
+    gates = _router_gates(gval, acfg)
 
     fe = gidx.reshape(-1)  # [T*k] expert ids
     fg = gates.reshape(-1)
     order = jnp.argsort(fe)
     se = fe[order]
     sg = fg[order]
-    tok_idx = order // k  # originating token of each sorted slot
+    tok_idx = order // k  # audit: exact — integer slot->token index math
+    # audit: exact — integer binary-search midpoint inside searchsorted
     starts = jnp.searchsorted(se, jnp.arange(n_experts), side="left")
     pos = jnp.arange(T * k) - starts[se]
 
@@ -145,19 +163,19 @@ def _route_a2a(tokens, router_w, w1, w3, w2, *, n_experts: int, k: int,
     budget.  Returns [T_s, D].
     """
     T_s, D = tokens.shape
-    n_model = n_experts // e_loc
-    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32), router_w)
+    n_model = n_experts // e_loc  # audit: exact — integer rank-count math
+    logits = exact_einsum("td,de->te", tokens.astype(jnp.float32), router_w)
     gval, gidx = jax.lax.top_k(logits, k)
-    gates = jax.nn.softmax(gval, axis=-1)
+    gates = _router_gates(gval, acfg)
 
     fe = gidx.reshape(-1)                      # global expert ids [T_s*k]
     fg = gates.reshape(-1)
-    dest = fe // e_loc                         # owning model rank
+    dest = fe // e_loc  # audit: exact — integer owning-rank index math
     order = jnp.argsort(dest)
     dest_s = dest[order]
     fe_s = fe[order]
     fg_s = fg[order]
-    tok_idx = order // k
+    tok_idx = order // k  # audit: exact — integer slot->token index math
     starts = jnp.searchsorted(dest_s, jnp.arange(n_model), side="left")
     pos = jnp.arange(T_s * k) - starts[dest_s]
     keep = pos < cap

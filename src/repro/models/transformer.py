@@ -183,6 +183,7 @@ def block_decode_paged(x, p, cache, page_table, positions, valid,
 
     # page-table indirection write; invalid tokens go to the scratch
     # page (0), whose contents are never addressed by any page table
+    # audit: exact — integer page-index arithmetic, not datapath
     pidx = jnp.clip(positions // PS, 0, Pp - 1)           # [B, S]
     pid = jnp.take_along_axis(page_table, pidx, axis=1)   # [B, S]
     pid = jnp.where(valid, pid, 0).reshape(-1)

@@ -37,13 +37,16 @@ def make_schedule(oc: OptConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
 
     def sched(step):
         step = step.astype(jnp.float32)
+        # audit: exact — scalar lr-schedule math, one divide per step
         warm = jnp.minimum((step + 1.0) / jnp.maximum(oc.warmup_steps, 1), 1.0)
         if oc.schedule == "cosine":
+            # audit: exact — scalar lr-schedule math, one divide per step
             t = jnp.clip((step - oc.warmup_steps)
                          / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
             mult = 0.5 * (1 + jnp.cos(jnp.pi * t)) * 0.9 + 0.1
         elif oc.schedule == "wsd":  # warmup-stable-decay (MiniCPM)
             decay_start = oc.total_steps * (1 - oc.decay_frac)
+            # audit: exact — scalar lr-schedule math, one divide per step
             t = jnp.clip((step - decay_start)
                          / jnp.maximum(oc.total_steps - decay_start, 1), 0, 1)
             mult = jnp.where(step < decay_start, 1.0, 1.0 - 0.9 * t)
@@ -101,6 +104,7 @@ def make_optimizer(oc: OptConfig):
 
         def update(grads, state, params, step):
             gnorm = _global_norm(grads)
+            # audit: exact — scalar grad-clip ratio, one divide per step
             scale = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-9))
             lr = sched(step)
             b1c = 1 - oc.b1 ** (step.astype(jnp.float32) + 1)
@@ -110,6 +114,9 @@ def make_optimizer(oc: OptConfig):
                 g = g.astype(jnp.float32) * scale
                 m = oc.b1 * m + (1 - oc.b1) * g
                 v = oc.b2 * v + (1 - oc.b2) * jnp.square(g)
+                # optimizer state math stays exact f32 (stability
+                # contract): only model-datapath mul/div is approximated
+                # audit: exact — Adam moment normalisation (exact f32)
                 step_ = (m / b1c) / (jnp.sqrt(v / b2c) + oc.eps)
                 p32 = p.astype(jnp.float32)
                 p32 = p32 - lr * (step_ + oc.weight_decay * p32)

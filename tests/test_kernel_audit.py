@@ -1,0 +1,326 @@
+"""Layer-3 kernel geometry audit: capture shim, one broken fixture per
+RPD005-008 checker, write-discipline analysis, full-registry sweep, and
+the kernel section of the baseline ratchet."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import findings as F
+from repro.analysis.capture import CapturedCall, SpecInfo, capture_pallas_calls
+from repro.analysis.findings import Finding
+from repro.analysis.kernel_audit import (
+    analyze_kernel_writes,
+    audit_call,
+    iter_variants,
+    pipeline_report_doc,
+    registry_coverage,
+    run_kernel_audit,
+)
+from repro.kernels import budget
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# --------------------------------------------------------------------------
+# capture shim
+# --------------------------------------------------------------------------
+
+def test_capture_records_geometry():
+    """The shim records grid / BlockSpecs / dimension_semantics from an
+    unmodified wrapper call, with no TPU and no compilation."""
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    x = jnp.ones((8, 16), jnp.float32)
+    w = jnp.ones((16, 8), jnp.float32)
+    with capture_pallas_calls() as calls:
+        out = log_matmul(x, w, "rapid10", interpret=False)
+    assert len(calls) == 1
+    c = calls[0]
+    assert len(c.grid) == 3                      # (mi, ni, kk)
+    assert c.dimension_semantics is not None
+    assert c.dimension_semantics[:2] == ("parallel", "parallel")
+    assert len(c.in_specs) >= 3                  # x, w, lut
+    assert len(c.out_specs) == 1
+    blk = c.in_specs[0].block()
+    assert blk[-1] % budget.LANE == 0
+    # the fake returns zeros of the declared out shape
+    assert out.shape == (8, 8) and not np.asarray(out).any()
+
+
+def test_capture_does_not_pollute_jit_cache(rng):
+    """A *real* interpret run at the same shapes after a capture must
+    not replay the fake's zeros (shim runs under jax.disable_jit)."""
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    with capture_pallas_calls():
+        log_matmul(x, w, "rapid10", interpret=False)
+    real = np.asarray(log_matmul(x, w, "rapid10", interpret=True))
+    assert real.any(), "real run after capture returned the fake's zeros"
+    np.testing.assert_allclose(real, np.asarray(x) @ np.asarray(w),
+                               rtol=0.2, atol=0.2)
+
+
+# --------------------------------------------------------------------------
+# synthetic fixtures: one clean, one broken per checker
+# --------------------------------------------------------------------------
+
+def _kernel_plain(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _kernel_accum(x_ref, o_ref, *, nk):
+    from jax.experimental import pallas as pl
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...]
+
+
+def _spec(name, shape, block, imap, dtype="float32", itemsize=4):
+    return SpecInfo(name=name, shape=shape, dtype=dtype, itemsize=itemsize,
+                    block_shape=block, index_map=imap)
+
+
+def _call(grid, in_specs, out_specs, dims=None, kernel=_kernel_plain,
+          aliases=None):
+    return CapturedCall(
+        kernel=kernel, kernel_name=getattr(kernel, "__name__", "k"),
+        kernel_file="src/repro/kernels/fake.py", kernel_kwargs={},
+        grid=tuple(grid), in_specs=list(in_specs), out_specs=list(out_specs),
+        dimension_semantics=dims, input_output_aliases=aliases)
+
+
+def test_known_good_geometry_is_clean():
+    call = _call(
+        grid=(2, 2),
+        in_specs=[_spec("in0", (256, 256), (128, 128), lambda i, j: (i, j))],
+        out_specs=[_spec("out0", (256, 256), (128, 128),
+                         lambda i, j: (i, j))],
+        dims=("parallel", "parallel"))
+    findings, rep = audit_call(call, "fix/good", "fixture")
+    assert findings == []
+    assert rep["double_buffer_safe"] is True
+    assert rep["write_discipline"] == "single-visit"
+    assert rep["output_revisit_dims"] == {"out0": []}
+
+
+def test_rpd005_over_budget_tile():
+    """A grid-varying (4096, 4096) f32 block is 64 MiB before double
+    buffering — far past the 16 MiB budget."""
+    call = _call(
+        grid=(2,),
+        in_specs=[_spec("in0", (8192, 4096), (4096, 4096),
+                        lambda i: (i, 0))],
+        out_specs=[_spec("out0", (16, 128), (8, 128), lambda i: (i, 0))],
+        dims=("arbitrary",))
+    findings, rep = audit_call(call, "fix/overbudget", "fixture")
+    assert rules_of(findings) == ["RPD005"]
+    assert rep["working_set_bytes"] > rep["vmem_budget_bytes"]
+    assert rep["double_buffer_safe"] is False
+
+
+def test_rpd006_misaligned_lane_block():
+    """Lane dim 64: neither a multiple of 128 nor the full array dim —
+    the exact bug class the auditor caught live in the rowbcast
+    denominator spec (1-D (bm,) block on the lane axis)."""
+    call = _call(
+        grid=(4,),
+        in_specs=[_spec("in0", (8, 256), (8, 64), lambda i: (0, i))],
+        out_specs=[_spec("out0", (32, 256), (8, 256), lambda i: (i, 0))],
+        dims=("arbitrary",))
+    findings, _ = audit_call(call, "fix/misaligned", "fixture")
+    assert rules_of(findings) == ["RPD006"]
+
+
+def test_rpd006_tail_block_not_dividing():
+    call = _call(
+        grid=(2,),
+        in_specs=[_spec("in0", (8, 384), (8, 256), lambda i: (0, i))],
+        out_specs=[_spec("out0", (16, 128), (8, 128), lambda i: (i, 0))],
+        dims=("arbitrary",))
+    findings, _ = audit_call(call, "fix/tail", "fixture")
+    assert any("does not divide" in f.msg for f in findings)
+    assert rules_of(findings) == ["RPD006"]
+
+
+def test_rpd007_non_surjective_index_map():
+    """Only 2 of 4 output blocks are ever visited: silent data drop."""
+    call = _call(
+        grid=(2,),
+        in_specs=[_spec("in0", (256, 128), (128, 128), lambda i: (i, 0))],
+        out_specs=[_spec("out0", (512, 128), (128, 128),
+                         lambda i: (i, 0))],
+        dims=("arbitrary",))
+    findings, rep = audit_call(call, "fix/nonsurjective", "fixture")
+    assert rules_of(findings) == ["RPD007"]
+    assert any("never visited" in f.msg for f in findings)
+    assert rep["double_buffer_safe"] is False
+
+
+def test_rpd007_index_map_out_of_range():
+    call = _call(
+        grid=(4,),
+        in_specs=[_spec("in0", (256, 128), (128, 128), lambda i: (i, 0))],
+        out_specs=[_spec("out0", (128, 128), (128, 128),
+                         lambda i: (0, 0))],
+        dims=("arbitrary",))
+    findings, _ = audit_call(call, "fix/oob", "fixture")
+    assert "RPD007" in rules_of(findings)
+    assert any("leaves the array" in f.msg for f in findings)
+
+
+def test_rpd008_revisit_on_parallel_dim():
+    """Output tile revisited across a dim declared 'parallel': Mosaic
+    may run those grid steps concurrently -> write race."""
+    call = _call(
+        grid=(2, 2),
+        in_specs=[_spec("in0", (256, 256), (128, 128), lambda i, j: (i, j))],
+        out_specs=[_spec("out0", (128, 128), (128, 128),
+                         lambda i, j: (0, 0))],
+        dims=("parallel", "arbitrary"),
+        kernel=None)  # source unavailable -> also unproven discipline
+    findings, rep = audit_call(call, "fix/parallelrace", "fixture")
+    assert rules_of(findings) == ["RPD008"]
+    assert any("parallel" in f.msg for f in findings)
+    assert rep["double_buffer_safe"] is False
+
+
+def test_rpd008_unguarded_assign_on_revisit():
+    call = _call(
+        grid=(2,),
+        in_specs=[_spec("in0", (256, 128), (128, 128), lambda i: (i, 0))],
+        out_specs=[_spec("out0", (128, 128), (128, 128), lambda i: (0, 0))],
+        dims=("arbitrary",), kernel=_kernel_plain)
+    findings, rep = audit_call(call, "fix/raced", "fixture")
+    assert rules_of(findings) == ["RPD008"]
+    assert rep["write_discipline"] == "raced"
+
+
+def test_rpd008_guarded_accumulate_is_clean():
+    call = _call(
+        grid=(2,),
+        in_specs=[_spec("in0", (256, 128), (128, 128), lambda i: (i, 0))],
+        out_specs=[_spec("out0", (128, 128), (128, 128), lambda i: (0, 0))],
+        dims=("arbitrary",), kernel=_kernel_accum)
+    findings, rep = audit_call(call, "fix/accum", "fixture")
+    assert findings == []
+    assert rep["write_discipline"] == "accumulate+first/last-guard"
+    assert rep["double_buffer_safe"] is True
+
+
+def test_analyze_kernel_writes_guard_env():
+    """Guard predicates evaluate against functools.partial keywords
+    (pl.program_id(0) == nk - 1 with nk bound at dispatch time)."""
+    import functools
+
+    def k(x_ref, o_ref, *, nk):
+        from jax.experimental import pallas as pl
+
+        @pl.when(pl.program_id(0) == nk - 1)
+        def _fin():
+            o_ref[...] = x_ref[...]
+
+    writes = analyze_kernel_writes(functools.partial(k, nk=4))
+    (w,) = [w for w in writes if w.target == "o_ref"]
+    assert w.kind == "assign"
+    assert w.guarded_visit(0, first=0, last=3)
+    assert not w.guarded_visit(0, first=0, last=7)
+    assert analyze_kernel_writes(None) is None
+
+
+# --------------------------------------------------------------------------
+# full sweep: every registered family x shape class audits clean
+# --------------------------------------------------------------------------
+
+def test_full_kernel_audit_is_clean():
+    findings, reports = run_kernel_audit()
+    assert findings == [], [f"{f.rule} {f.entry}: {f.msg}" for f in findings]
+    assert len(reports) >= len(iter_variants())
+    assert all(r["double_buffer_safe"] for r in reports)
+    families = {r["family"] for r in reports}
+    assert {"log_matmul", "fused_softmax", "fused_rms", "fused_div_eltwise",
+            "fused_div_rowbcast", "rapid_mul", "rapid_div"} <= families
+    # the deep-K class is the one place the race checker is live
+    deep = [r for r in reports if r["variant"].startswith(
+        "log_matmul/deepk2048")]
+    assert deep and all(
+        r["write_discipline"] == "accumulate+first/last-guard"
+        and r["output_revisit_dims"]["out0"] for r in deep)
+
+
+def test_registry_coverage_complete():
+    cover = registry_coverage()
+    assert cover, "dispatch_signature('pallas') returned no families"
+    missing = [fam for fam, kfams in cover.items() if not kfams]
+    assert not missing, f"registry families with no audited kernel: {missing}"
+
+
+def test_committed_pipeline_report_covers_all_variants():
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "PIPELINE_REPORT.json")
+    with open(path) as fh:
+        doc = json.load(fh)
+    committed = {k["variant"] for k in doc["kernels"]}
+    expected = {vid for vid, _, _ in iter_variants()}
+    # every registered variant appears (multi-call variants commit as id#N)
+    missing = {v for v in expected
+               if v not in committed
+               and not any(c.startswith(v + "#") for c in committed)}
+    assert not missing, f"PIPELINE_REPORT.json is stale; missing {missing}"
+    assert all(k["double_buffer_safe"] for k in doc["kernels"])
+    assert pipeline_report_doc([])["version"] == doc["version"]
+
+
+# --------------------------------------------------------------------------
+# ratchet: kernel section of AUDIT_baseline.json
+# --------------------------------------------------------------------------
+
+def _kf(rule, entry, primitive, file="src/repro/kernels/a.py", msg="m"):
+    return Finding(layer="kernel", rule=rule, file=file, line=0, msg=msg,
+                   entry=entry, primitive=primitive)
+
+
+def test_kernel_finding_key_is_pin_independent():
+    """Keys carry no file/line so the two CI jax pins ratchet against
+    one committed baseline even if kernel sources shift lines."""
+    a = _kf("RPD005", "log_matmul/square512/plain", "kernel",
+            file="src/repro/kernels/log_matmul/log_matmul.py")
+    b = _kf("RPD005", "log_matmul/square512/plain", "kernel",
+            file="/other/checkout/log_matmul.py", msg="different text")
+    assert a.key() == b.key()
+    res = F.compare([a], [b])
+    assert res.ok and not res.new and not res.stale
+
+
+def test_kernel_section_roundtrip_and_ratchet(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    known = _kf("RPD006", "fix/x", "in0")
+    F.dump_report(path, [], [], kernel_findings=[known])
+    loaded = F.load_baseline(path)
+    assert [f.key() for f in loaded] == [known.key()]
+    assert F.compare([known], loaded).ok
+    novel = _kf("RPD008", "fix/y", "out0")
+    res = F.compare([known, novel], loaded)
+    assert not res.ok and [f.key() for f in res.new] == [novel.key()]
+
+
+def test_prune_stale_rewrites_baseline(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    keep = _kf("RPD006", "fix/keep", "in0")
+    gone = _kf("RPD005", "fix/gone", "kernel")
+    F.dump_report(path, [], [], kernel_findings=[keep, gone])
+    removed = F.prune_stale(path, [keep])
+    assert removed == 1
+    assert [f.key() for f in F.load_baseline(path)] == [keep.key()]
+    assert F.prune_stale(path, [keep]) == 0  # idempotent, no rewrite

@@ -98,6 +98,59 @@ def test_log_matmul_degenerate_shapes_bitexact(shape, rng):
         np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
 
 
+def test_log_matmul_explicit_blocks_exceed_problem(rng):
+    """Explicit ``blocks=`` with bm/bn/bk larger than the problem dims
+    (bm > M): the pad-to-block-grid path must stay bit-exact."""
+    from repro.core.ops import qmatmul
+
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    got = log_matmul(x, w, "rapid10", blocks=(256, 256, 512),
+                     interpret=True)
+    want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
+    assert got.shape == (4, 8)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
+
+
+def test_log_matmul_explicit_blocks_over_budget():
+    """An oversized explicit ``blocks=`` fails at call time against the
+    same VMEM constant the static auditor (RPD005) ratchets on, instead
+    of dying on-device."""
+    x = jnp.zeros((8, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM budget"):
+        log_matmul(x, w, "rapid10", blocks=(2048, 4096, 512),
+                   interpret=True)
+
+
+def test_pick_blocks_norm_epilogue_rebalance_fits_budget():
+    """Norm epilogues force whole padded rows per tile; the rebalanced
+    bm/bk must keep the working set inside the auditor's budget even at
+    real model widths."""
+    from repro.kernels import budget as B
+    from repro.kernels.log_matmul.ops import _check_budget, _pick_blocks
+    from repro.core.backend import Epilogue
+    from repro.kernels.fused_div import ref as fdref
+
+    ep = Epilogue(norm="rms", div_scheme="rapid9")
+
+    def rebalanced(m, n, k):
+        bm, bn, bk = _pick_blocks(m, n, k)
+        bn = fdref.padded_width(n)
+        bm = max(B.SUBLANE, min(bm, B.slab_rows(bn)))
+        bk = max(B.LANE, min(bk, B.slab_depth(bn)))
+        return bm, bn, bk
+
+    for m, n, k in [(8, 4096, 512), (256, 8192, 1024), (1, 3000, 128)]:
+        _check_budget(*rebalanced(m, n, k), ep, False, False)  # no raise
+
+    # vocab-width rows can't fit whole in VMEM at the minimum bk of one
+    # lane tile: the wrapper must fail fast, not die on-device
+    with pytest.raises(ValueError, match="VMEM budget"):
+        _check_budget(*rebalanced(1, 50257, 128), ep, False, False)
+
+
 def test_pick_blocks_hardware_aligned():
     """Blocks are multiples of the f32 tile (8 sublanes / 128 lanes) and
     bk stays a multiple of the unroll factor for every K."""
