@@ -1,0 +1,126 @@
+"""Kernel roofline micro-benchmark: pipeline depth and fusion effects.
+
+Three measurements, each reported with arithmetic intensity (flop/byte
+over the HBM traffic the kernel *must* move) so the numbers sit on a
+roofline rather than floating as bare microseconds:
+
+  * ``log_matmul`` at pipeline depth 1 (grid formulation) vs the
+    depth>=2 manual async-copy pipeline — same numerics (bit-exact),
+    different schedule; on TPU the depth-2 row shows whether the
+    next-tile fetch actually hides behind the current tile's compute;
+  * ``fused_softmax_div`` depth 1 vs depth >= 2 — the row-slab pipeline
+    with in-flight output write-back;
+  * decode attention before/after the flash fusion: the registry's
+    separate-passes jnp path (score matmul + mask + stats + value
+    matmul + combine divide, each materialised) vs the fused
+    flash-decode kernel whose intermediates never visit HBM.
+
+Off-TPU the Pallas rows run under the interpreter, where wall time
+measures python dispatch, not memory systems — the module is then a
+bit-rot gate (``--smoke``) proving every schedule still executes, and
+the printed arithmetic intensities are the shape-derived constants a
+TPU run would place on its roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as be
+from repro.kernels.spec import KernelSpec, PipelineSpec
+
+DEPTHS = (1, 2)
+
+
+def _bench(fn, *args, iters: int = 10) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _row(label, us, flops, bytes_moved):
+    return (label, us, flops / max(us, 1e-9) / 1e3,  # GFLOP/s
+            flops / bytes_moved)                     # flop/byte
+
+
+def run(seed: int = 0, shrink: int = 1, iters: int = 10):
+    from repro.kernels.flash_attn.ops import flash_decode_attn
+    from repro.kernels.fused_div.ops import fused_softmax_div
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    rng = np.random.default_rng(seed)
+    bk = be.resolve_backend_name(None)
+    interpret = bk != "pallas"
+    # the interpreter is a correctness path: per-op python dispatch
+    # makes real shapes take minutes — shrink aggressively
+    shrink = max(shrink, 16 if interpret else 1)
+    rows = []
+
+    # -- matmul depth sweep ------------------------------------------------
+    m, n, k = max(8, 512 // shrink), max(128, 2048 // shrink), 512
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mm_flops = 2.0 * m * n * k
+    mm_bytes = 4.0 * (m * k + k * n + m * n)
+    for depth in DEPTHS:
+        spec = KernelSpec(pipeline=PipelineSpec(depth=depth))
+        us = _bench(lambda a, b: log_matmul(
+            a, b, "rapid10", spec=spec, interpret=interpret), x, w,
+            iters=iters)
+        rows.append(_row(f"log_matmul_{m}x{n}x{k}/depth{depth}[{bk}]",
+                         us, mm_flops, mm_bytes))
+
+    # -- fused softmax depth sweep ----------------------------------------
+    sm, sn = max(8, 4096 // shrink), max(128, 4096 // shrink)
+    e = jnp.asarray(np.abs(rng.normal(size=(sm, sn))) + 1e-3, jnp.float32)
+    sm_flops = 4.0 * sm * sn          # exp-weights + sum + divide order
+    sm_bytes = 4.0 * 2 * sm * sn      # one read + one write per element
+    for depth in DEPTHS:
+        spec = KernelSpec(pipeline=PipelineSpec(depth=depth))
+        us = _bench(lambda a: fused_softmax_div(
+            a, "rapid9", spec=spec, interpret=interpret), e, iters=iters)
+        rows.append(_row(f"fused_softmax_{sm}x{sn}/depth{depth}[{bk}]",
+                         us, sm_flops, sm_bytes))
+
+    # -- decode attention: separate passes vs fused flash kernel ----------
+    b, c, kv, g, hd = 4, max(128, 4096 // shrink), 2, 4, 64
+    qf = jnp.asarray(rng.normal(size=(b, kv, g, hd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    sp = jnp.asarray(rng.integers(0, 10 * c, size=(b, c)), jnp.int32)
+    at_flops = 2.0 * 2 * b * kv * g * c * hd      # scores + values
+    # fused traffic: q + caches + positions in, output out (stats never
+    # leave VMEM); the separate-passes path additionally round-trips the
+    # [B, KV, G, C] score/weight tensors
+    at_bytes = 4.0 * (b * kv * g * hd * 2 + 2 * b * c * kv * hd + b * c)
+    from repro.kernels.flash_attn.ref import decode_attn_ref
+    separate = jax.jit(lambda q_, k_, v_, s_: decode_attn_ref(
+        q_, k_, v_, s_, 8 * c, 0, "rapid9"))
+    us = _bench(separate, qf, kc, vc, sp, iters=iters)
+    rows.append(_row(f"decode_attn_c{c}/separate[jnp]", us, at_flops,
+                     at_bytes + 4.0 * 2 * b * kv * g * c))
+    us = _bench(lambda q_, k_, v_, s_: flash_decode_attn(
+        q_, k_, v_, s_, 8 * c, 0, "rapid9", interpret=interpret),
+        qf, kc, vc, sp, iters=iters)
+    rows.append(_row(f"decode_attn_c{c}/flash[{bk}]", us, at_flops,
+                     at_bytes))
+    return rows
+
+
+def main(smoke: bool = False):
+    print("name,us,gflops,flop_per_byte")
+    # smoke: 32x-shrunk shapes, one rep — proves every schedule (both
+    # pipeline depths and the fused flash path) still executes
+    rows = run(shrink=32, iters=1) if smoke else run()
+    for name, us, gf, ai in rows:
+        print(f"{name},{us:.1f},{gf:.3f},{ai:.2f}")
+
+
+if __name__ == "__main__":
+    main()

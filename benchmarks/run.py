@@ -5,6 +5,8 @@
   fused_div          fused divider family vs reduce+divide round-trips
   apps_qor           Figs. 8-10 end-to-end application QoR
   e2e_train          trainability of RAPID arithmetic (loss curves)
+  roofline           kernel roofline: pipeline depth 1 vs 2 and the
+                     fused flash-attention kernel vs separate passes
   roofline_report    SSRoofline table from the dry-run artifacts
   serve_load         continuous batching vs fixed-slot under a Poisson
                      arrival trace (tokens/s + p50/p99 latency)
@@ -25,6 +27,12 @@ for order-of-magnitude rot (an accidentally-quadratic path, an
 interpreter fallback), not microbenchmarking.  Sub-second baselines are
 compared against ``tolerance * max(wall, MIN_GATED_WALL_S)`` so timer
 jitter on trivial modules cannot fail a PR.
+
+Benchmarks new in this run (no baseline row) are not gated, but a
+gated run *auto-records* the ones that passed into the baseline
+artifact — same mode only (smoke vs full) — so the module that skipped
+the gate once is gated from its second run onward instead of silently
+forever.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ import time
 import traceback
 
 ALL = ["table3_accuracy", "table3_throughput", "fused_div", "apps_qor",
-       "e2e_train", "roofline_report", "serve_load"]
+       "e2e_train", "roofline", "roofline_report", "serve_load"]
 
 #: Below this baseline wall time, the time gate compares against
 #: tolerance * MIN_GATED_WALL_S instead (pure-jitter regime).
@@ -123,7 +131,8 @@ def main(argv=None) -> int:
         rc = 1
     if args.baseline:
         with open(args.baseline) as f:
-            baseline = json.load(f).get("benchmarks", {})
+            base_doc = json.load(f)
+        baseline = base_doc.get("benchmarks", {})
         problems = compare_to_baseline(results, baseline, args.tolerance)
         if problems:
             print("\nBENCHMARK REGRESSIONS vs baseline:")
@@ -133,6 +142,25 @@ def main(argv=None) -> int:
         else:
             print(f"\nbenchmark gate OK vs {args.baseline} "
                   f"(tolerance {args.tolerance}x)")
+        # A benchmark added in this PR has no baseline row, so
+        # compare_to_baseline skipped it above — and, left alone, would
+        # keep skipping it forever.  Fold new ok modules into the
+        # artifact now so the *second* run gates them.  Failed modules
+        # are never recorded, and neither is a mode mismatch: smoke and
+        # full walls differ by orders of magnitude, so a smoke run must
+        # not seed rows a full-mode gate would then compare against.
+        new_ok = sorted(n for n, r in results.items()
+                        if n not in baseline and r.get("status") == "ok")
+        if new_ok and bool(base_doc.get("smoke")) == bool(args.smoke):
+            for n in new_ok:
+                baseline[n] = {"status": "ok",
+                               "wall_s": results[n]["wall_s"]}
+                print(f"recorded new benchmark {n!r} into {args.baseline} "
+                      f"(wall {results[n]['wall_s']:.1f}s)")
+            base_doc["benchmarks"] = baseline
+            with open(args.baseline, "w") as f:
+                json.dump(base_doc, f, indent=2, sort_keys=True)
+                f.write("\n")
     return rc
 
 

@@ -78,6 +78,31 @@ tail, res_stream = qmatmul(
 )
 print("fused block tail:", tail.shape, "residual stream:", res_stream.shape)
 
+# --- KernelSpec: one spec object, and the pipeline-depth knob -----------
+# Every Pallas kernel family (log_matmul, the fused_div variants,
+# rapid_mul / rapid_div elementwise, flash-decode attention) accepts the
+# same spec object instead of per-family positional tuples (the old
+# `blocks=(bm, bn, bk)` still works for one release, with a
+# DeprecationWarning):
+from repro.kernels.log_matmul.ops import log_matmul
+from repro.kernels.spec import KernelSpec, PipelineSpec
+
+spec = KernelSpec(bm=8, bn=128, bk=128,            # tile geometry (None: auto)
+                  pipeline=PipelineSpec(depth=2))  # in-flight copy stages
+# depth=1 lowers the classic grid formulation; depth>=2 emits a manual
+# async-copy pipeline (HBM-resident operands, `depth` VMEM tile buffers
+# rotating behind DMA semaphores).  The knob is schedule-only — every
+# depth is bit-exact against the jnp oracle (tests/test_parity_sweep.py)
+# — and the kernel auditor re-checks the VMEM working set *at the
+# requested depth* (PIPELINE_REPORT.json: pipeline_depth/scratch_bytes).
+y1 = log_matmul(x, w, "rapid10", interpret=True,
+                spec=KernelSpec(pipeline=PipelineSpec(depth=1)))
+y2 = log_matmul(x, w, "rapid10", interpret=True, spec=spec)
+print("\ndepth 1 vs depth 2 bit-identical:", bool((y1 == y2).all()))
+# benchmarks/roofline.py times the depth-1 vs depth-2 schedules and the
+# fused flash-attention kernel vs the separate-passes path on a shared
+# arithmetic-intensity axis.
+
 # --- running sharded with the pallas backend ----------------------------
 # The pallas kernels are *per-device*, so on a multi-device process the
 # hardware autodetect answers per call site: pjit-visible (global-view)

@@ -43,6 +43,9 @@ class SpecInfo:
     itemsize: int
     block_shape: Optional[Tuple[int, ...]]  # None: whole-array default
     index_map: Optional[Callable]           # None: whole-array default
+    #: BlockSpec memory space ("any" = HBM-resident, kernel DMAs slices
+    #: manually); None = the default grid-staged VMEM placement
+    memory_space: Optional[str] = None
 
     def block(self) -> Tuple[int, ...]:
         """Block shape with the whole-array default made explicit."""
@@ -79,6 +82,9 @@ class CapturedCall:
     input_output_aliases: Any = None
     interpret: bool = False
     out_is_list: bool = False
+    #: manual-pipeline scratch ({"shape", "dtype"} per entry; DMA
+    #: semaphores show up with dtype "dma_sem" and no byte cost)
+    scratch_shapes: List[dict] = field(default_factory=list)
 
     def operands(self) -> List[SpecInfo]:
         return list(self.in_specs) + list(self.out_specs)
@@ -93,10 +99,26 @@ def _unwrap_kernel(kernel: Callable) -> Tuple[Callable, dict]:
     return fn, kwargs
 
 
-def _spec_fields(spec) -> Tuple[Optional[tuple], Optional[Callable]]:
+def _spec_fields(spec) -> Tuple[Optional[tuple], Optional[Callable],
+                                Optional[str]]:
     if spec is None:
-        return None, None
-    return getattr(spec, "block_shape", None), getattr(spec, "index_map", None)
+        return None, None, None
+    ms = getattr(spec, "memory_space", None)
+    return (getattr(spec, "block_shape", None),
+            getattr(spec, "index_map", None),
+            str(ms) if ms is not None else None)
+
+
+def _scratch_info(scratch_shapes) -> List[dict]:
+    out = []
+    for s in _as_list(scratch_shapes):
+        shape = getattr(s, "shape", None)
+        dtype = getattr(s, "dtype", None)
+        out.append({
+            "shape": tuple(int(d) for d in shape) if shape else (),
+            "dtype": getattr(dtype, "__name__", None) or str(dtype),
+        })
+    return out
 
 
 def _dimension_semantics(compiler_params) -> Optional[Tuple[str, ...]]:
@@ -141,7 +163,7 @@ def capture_pallas_calls():
 
     def shim(kernel, *, grid=None, in_specs=None, out_specs=None,
              out_shape=None, compiler_params=None, interpret=False,
-             input_output_aliases=None, **_ignored):
+             input_output_aliases=None, scratch_shapes=None, **_ignored):
         fn, kkwargs = _unwrap_kernel(kernel)
         try:
             kernel_file = inspect.getsourcefile(fn) or "<unknown>"
@@ -165,24 +187,25 @@ def capture_pallas_calls():
                 input_output_aliases=input_output_aliases,
                 interpret=bool(interpret),
                 out_is_list=out_is_list,
+                scratch_shapes=_scratch_info(scratch_shapes),
             )
             for i, (op, spec) in enumerate(zip(operands, in_spec_list)):
-                bs, imap = _spec_fields(spec)
+                bs, imap, ms = _spec_fields(spec)
                 call.in_specs.append(SpecInfo(
                     name=f"in{i}", shape=tuple(op.shape), dtype=str(op.dtype),
                     itemsize=int(op.dtype.itemsize),
                     block_shape=tuple(bs) if bs is not None else None,
-                    index_map=imap,
+                    index_map=imap, memory_space=ms,
                 ))
             specs = list(out_spec_list) + [None] * (
                 len(out_shapes) - len(out_spec_list))
             for i, (sd, spec) in enumerate(zip(out_shapes, specs)):
-                bs, imap = _spec_fields(spec)
+                bs, imap, ms = _spec_fields(spec)
                 call.out_specs.append(SpecInfo(
                     name=f"out{i}", shape=tuple(sd.shape), dtype=str(sd.dtype),
                     itemsize=int(jnp.dtype(sd.dtype).itemsize),
                     block_shape=tuple(bs) if bs is not None else None,
-                    index_map=imap,
+                    index_map=imap, memory_space=ms,
                 ))
             captured.append(call)
             zeros = [jnp.zeros(sd.shape, sd.dtype) for sd in out_shapes]

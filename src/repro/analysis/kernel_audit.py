@@ -28,12 +28,21 @@ is checked per shape class:
           visit ``pl.when`` guards, and the revisited dim must not be
           declared "parallel".
 
+Two kernel formulations pass through here.  Grid-staged kernels let
+Mosaic stage VMEM tiles per grid step; all four checks apply per
+operand.  Manual-pipeline kernels (the depth>=2 paths of
+``log_matmul``/``fused_div`` and the flash-decode kernel) declare bulk
+operands in ANY memory and DMA slices through depth-deep VMEM scratch
+themselves — for those operands RPD006/RPD007 don't apply (coverage is
+the in-kernel copy loop's job, proven bit-exact by the parity sweep)
+and RPD005 prices the declared scratch instead.
+
 Alongside findings, the audit emits a **pipeline-legality report** per
-variant — grid, semantics, working set, revisit structure, and whether
-double-buffering is safe — the contract the upcoming software-
-pipelining PR must preserve (``PIPELINE_REPORT.json`` at the repo
-root).  Findings flow through the ``findings.compare`` ratchet into the
-``kernel`` section of ``AUDIT_baseline.json``.
+variant — grid, semantics, pipeline depth, working set (incl. scratch),
+revisit structure, and whether double-buffering is safe — the contract
+future kernel changes must preserve (``PIPELINE_REPORT.json`` at the
+repo root).  Findings flow through the ``findings.compare`` ratchet
+into the ``kernel`` section of ``AUDIT_baseline.json``.
 """
 from __future__ import annotations
 
@@ -201,6 +210,22 @@ def _block_grid(spec: SpecInfo) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
     return blk, nblocks
 
 
+def _is_manual(spec: SpecInfo) -> bool:
+    """ANY-memory operand: HBM-resident, DMA'd manually by the kernel."""
+    ms = getattr(spec, "memory_space", None)
+    return ms is not None and "any" in str(ms).lower()
+
+
+def _scratch_bytes(entry: dict) -> int:
+    """VMEM bytes of one scratch allocation (0 for DMA semaphores)."""
+    import numpy as np
+    try:
+        itemsize = np.dtype(entry.get("dtype")).itemsize
+    except TypeError:
+        return 0
+    return budget.tile_bytes(entry.get("shape", ()), itemsize)
+
+
 def audit_call(call: CapturedCall, variant: str, family: str,
                platform: str = "tpu") -> Tuple[List[Finding], dict]:
     """All four checks over one captured ``pallas_call`` geometry."""
@@ -216,6 +241,15 @@ def audit_call(call: CapturedCall, variant: str, family: str,
     visits: Dict[str, Dict[Tuple[int, ...], List[Tuple[int, ...]]]] = {}
     operands = call.operands()
     for spec in operands:
+        if _is_manual(spec):
+            # ANY-memory operand: HBM-resident, the kernel body DMAs
+            # slices into explicit VMEM scratch.  Grid-staging rules
+            # (RPD006/RPD007) don't apply — the VMEM cost and the
+            # coverage obligation live with the scratch slots and the
+            # in-kernel copy loop, which the parity sweep exercises
+            # bit-exactly against the grid formulation.
+            visits[spec.name] = {}
+            continue
         blk, nblocks = _block_grid(spec)
 
         # RPD006: lane/sublane alignment + block divides the padded dim
@@ -263,20 +297,28 @@ def audit_call(call: CapturedCall, variant: str, family: str,
                  f"{len(missing)} of {total_blocks} blocks never visited "
                  f"(first: {missing[0]}) — elements silently dropped")
 
-    # RPD005: per-grid-step VMEM working set vs the shared budget
+    # RPD005: per-grid-step VMEM working set vs the shared budget.
+    # Grid-staged operands pay PIPELINE_BUFFERS copies when grid-varying;
+    # ANY-memory operands pay nothing here (their VMEM residency is the
+    # explicit scratch, already sized depth-deep by the wrapper).
     working_set = 0
     op_report = []
     for spec in operands:
+        manual = _is_manual(spec)
         blk, _ = _block_grid(spec)
         varying = len(visits.get(spec.name, {})) > 1
-        buffers = budget.PIPELINE_BUFFERS if varying else 1
+        buffers = 0 if manual else (
+            budget.PIPELINE_BUFFERS if varying else 1)
         nbytes = budget.tile_bytes(blk, spec.itemsize) * buffers
         working_set += nbytes
         op_report.append({
             "name": spec.name, "shape": list(spec.shape),
             "block": list(blk), "dtype": spec.dtype,
+            "memory_space": spec.memory_space,
             "grid_varying": varying, "vmem_bytes": nbytes,
         })
+    scratch_bytes = sum(_scratch_bytes(s) for s in call.scratch_shapes)
+    working_set += scratch_bytes
     vmem_budget = budget.vmem_budget(platform)
     if working_set > vmem_budget:
         emit("RPD005", "kernel",
@@ -324,15 +366,22 @@ def audit_call(call: CapturedCall, variant: str, family: str,
                 discipline = "accumulate+first/last-guard"
 
     ds = list(call.dimension_semantics) if call.dimension_semantics else None
+    depth = int(call.kernel_kwargs.get("depth", 1))
+    manual_ops = [s.name for s in operands if _is_manual(s)]
     safe = not findings and call.input_output_aliases in (None, {}, ())
     if safe:
-        reason = ("input tiles are pure functions of the grid index "
+        staged = ("manual async-copy pipeline: HBM operands "
+                  f"({', '.join(manual_ops)}) rotate through depth-{depth} "
+                  "VMEM scratch, next-slice fetch overlapping compute"
+                  if manual_ops else
+                  "input tiles are pure functions of the grid index "
                   "(prefetch for step t+1 never depends on step t's "
-                  "stores); outputs are "
+                  "stores)")
+        reason = (staged + "; outputs are "
                   + ("revisited only along sequential dims with "
                      "accumulate/first/last-guarded writes"
                      if any_revisit else "written exactly once")
-                  + f"; 2x-buffered working set {working_set} B fits the "
+                  + f"; buffered working set {working_set} B fits the "
                   f"{vmem_budget} B budget")
     else:
         reason = ("; ".join(f"[{f.rule}] {f.msg}" for f in findings)
@@ -344,8 +393,10 @@ def audit_call(call: CapturedCall, variant: str, family: str,
         "file": file,
         "grid": list(call.grid),
         "dimension_semantics": ds,
+        "pipeline_depth": depth,
         "operands": op_report,
         "working_set_bytes": working_set,
+        "scratch_bytes": scratch_bytes,
         "vmem_budget_bytes": vmem_budget,
         "output_revisit_dims": revisit_dims,
         "write_discipline": discipline,
@@ -368,9 +419,15 @@ REGISTRY_FAMILY = {
     "fused_rms": "rms_div",
     "fused_div_eltwise": "div",
     "fused_div_rowbcast": "div",
+    "flash_attn": "decode_attn",
     "rapid_mul": None,
     "rapid_div": None,
 }
+
+
+def _depth_spec(depth: int):
+    from repro.kernels.spec import KernelSpec, PipelineSpec
+    return KernelSpec(pipeline=PipelineSpec(depth=depth))
 
 
 def _drive_log_matmul(m, n, k, **kwargs):
@@ -420,9 +477,26 @@ def iter_variants() -> List[Tuple[str, str, Callable[[], None]]]:
     }
     eps = _log_matmul_epilogues()
     for sname, (m, n, k) in matmul_shapes.items():
+        # deepk2048 pins depth=1: K > MAX_BK on the *grid* formulation
+        # is the one geometry where output tiles are revisited, keeping
+        # the RPD008 race checker exercised on real kernel source
+        kw = dict(spec=_depth_spec(1)) if sname == "deepk2048" else {}
         variants.append((
             f"log_matmul/{sname}/plain", "log_matmul",
-            functools.partial(_drive_log_matmul, m, n, k)))
+            functools.partial(_drive_log_matmul, m, n, k, **kw)))
+    # explicit pipeline depths either side of the PIPELINE_BUFFERS
+    # default (which every variant above audits implicitly)
+    for depth in (1, 3):
+        m, n, k = matmul_shapes["square512"]
+        variants.append((
+            f"log_matmul/square512/depth{depth}", "log_matmul",
+            functools.partial(_drive_log_matmul, m, n, k,
+                              spec=_depth_spec(depth))))
+    m, n, k = matmul_shapes["deepk2048"]
+    variants.append((
+        "log_matmul/deepk2048/depth2", "log_matmul",
+        functools.partial(_drive_log_matmul, m, n, k,
+                          spec=_depth_spec(2))))
     for ename, mk in eps.items():
         if ename == "plain":
             continue
@@ -439,10 +513,10 @@ def iter_variants() -> List[Tuple[str, str, Callable[[], None]]]:
             _drive_log_matmul, 128, 4096, 512,
             epilogue=Epilogue(norm="rms", div_scheme="rapid9"))))
 
-    def drive_softmax(m, n):
+    def drive_softmax(m, n, spec=None):
         from repro.kernels.fused_div.ops import fused_softmax_div
         fused_softmax_div(jnp.zeros((m, n), jnp.float32), "rapid9",
-                          interpret=False)
+                          spec=spec, interpret=False)
 
     def drive_rms(m, n):
         from repro.kernels.fused_div.ops import fused_rms_div
@@ -475,6 +549,32 @@ def iter_variants() -> List[Tuple[str, str, Callable[[], None]]]:
         # ride as a [M, 1] column block, not a 1-D (bm,) vector
         ("fused_div_rowbcast/rows128x4096", "fused_div_rowbcast",
          functools.partial(drive_rowbcast, 128, 4096)),
+        ("fused_softmax/rows64x1000/depth1", "fused_softmax",
+         functools.partial(drive_softmax, 64, 1000, _depth_spec(1))),
+        ("fused_softmax/rows64x1000/depth3", "fused_softmax",
+         functools.partial(drive_softmax, 64, 1000, _depth_spec(3))),
+    ]
+
+    def drive_flash(b, c, kv, g, hd, scheme, spec=None):
+        from repro.kernels.flash_attn.ops import flash_decode_attn
+        flash_decode_attn(
+            jnp.zeros((b, kv, g, hd), jnp.float32),
+            jnp.zeros((b, c, kv, hd), jnp.float32),
+            jnp.zeros((b, c, kv, hd), jnp.float32),
+            jnp.zeros((b, c), jnp.int32), 0, 0, scheme,
+            spec=spec, interpret=False)
+
+    variants += [
+        # decode rows scan a 256-slot cache in two 128-slot chunks with
+        # the RAPID divider combine; depth3 overlaps two fetches
+        ("flash_attn/decode_b2kv4c256", "flash_attn",
+         functools.partial(drive_flash, 2, 256, 4, 4, 64, "rapid9")),
+        ("flash_attn/decode_b2kv4c256/depth3", "flash_attn",
+         functools.partial(drive_flash, 2, 256, 4, 4, 64, "rapid9",
+                           _depth_spec(3))),
+        # exact-divide combine, single chunk (schedules coincide w/ ref)
+        ("flash_attn/decode_exact_c128", "flash_attn",
+         functools.partial(drive_flash, 1, 128, 2, 8, 128, None)),
     ]
 
     def drive_rapid_mul():
@@ -553,12 +653,16 @@ def pipeline_report_doc(reports: List[dict]) -> dict:
         "version": 1,
         "contract": (
             "Per-kernel pipeline legality, derived statically from "
-            "captured pallas_call geometry.  The software-pipelining PR "
-            "must preserve every double_buffer_safe=true row: keep input "
-            "index maps pure functions of the grid index, keep output "
-            "revisits on sequential dims with accumulate/first/last-"
-            "guarded writes, and stay inside vmem_budget_bytes with "
-            "PIPELINE_BUFFERS-deep buffering."),
+            "captured pallas_call geometry.  Every double_buffer_safe="
+            "true row must stay true: grid-staged inputs keep index "
+            "maps pure functions of the grid index, manual-pipeline "
+            "inputs (operands[].memory_space='any') rotate HBM slices "
+            "through pipeline_depth VMEM scratch slots (scratch_bytes, "
+            "already depth-deep, is included in working_set_bytes), "
+            "output revisits stay on sequential dims with accumulate/"
+            "first/last-guarded writes, and working_set_bytes stays "
+            "inside vmem_budget_bytes at PIPELINE_BUFFERS-deep "
+            "buffering."),
         "kernels": reports,
     }
 

@@ -20,7 +20,11 @@ tradeoff.  These rules make that class of rot visible:
           per-(scheme, dtype) memoization and bloats every executable;
   RPD004  literal backend strings (``backend="pallas"`` etc.) at call
           sites instead of ``ApproxConfig.backend_for(site)`` — a
-          hard-coded name bypasses per-site routing and env/CI pinning.
+          hard-coded name bypasses per-site routing and env/CI pinning;
+  RPD009  reads of the deprecated ``ApproxConfig.backend`` /
+          ``.matmul_backend`` aliases — both collapse the per-site map
+          to its "default" entry and are removed next release (the
+          properties also raise ``DeprecationWarning`` at runtime).
 
 Marker contract: ``# audit: exact — <reason>`` on the flagged line (or
 as a standalone comment on the line above) suppresses RPD rules for
@@ -60,6 +64,8 @@ RULES = {
               "mitchell.lut_host/lut_device at trace-constant level)",
     "RPD004": "literal backend string at a call site (use "
               "ApproxConfig.backend_for(site))",
+    "RPD009": "deprecated ApproxConfig.backend / .matmul_backend alias "
+              "read (use backend_for(site); removed next release)",
 }
 
 # Layer-3 kernel-geometry rules (RPD005+), checked by
@@ -88,6 +94,11 @@ _MATMUL_ATTRS = {"dot", "matmul", "einsum", "tensordot", "vdot",
 _MATMUL_ROOTS = {"jnp", "jax", "lax"}
 _LUT_FNS = {"lut_host", "lut_device", "mul_lut_device", "div_lut_device"}
 _BACKEND_NAMES = {"jnp", "pallas", "pallas-interpret"}
+# base names that conventionally hold an ApproxConfig: `<base>.backend`
+# on one of these is the deprecated alias (RPD009).  `.matmul_backend`
+# is unambiguous — no other type in the package carries that attribute
+# — so it flags on any base.
+_APPROX_BASES = {"acfg", "acfg_local", "approx", "approx_config"}
 
 MARKER_RE = re.compile(r"#\s*audit:\s*exact\b\s*[—\-–:(]*\s*(?P<reason>.*)")
 
@@ -207,6 +218,19 @@ class _Visitor(ast.NodeVisitor):
                        "raw '/' bypasses the RAPID divider (route through "
                        "qdiv/qsoftmax_div/qrms_div or mark "
                        "'# audit: exact — reason')")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if isinstance(node.ctx, ast.Load):
+            base = _dotted(node.value)
+            base_leaf = base.rsplit(".", 1)[-1] if base else ""
+            if node.attr == "matmul_backend" or (
+                    node.attr == "backend" and base_leaf in _APPROX_BASES):
+                self._emit(
+                    "RPD009", node,
+                    f"deprecated alias {base_leaf or '<expr>'}.{node.attr} "
+                    "collapses the per-site backend map (use "
+                    "backend_for('default') or a specific site)")
         self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call):

@@ -105,6 +105,7 @@ __all__ = [
     "div",
     "softmax_div",
     "rms_div",
+    "decode_attn",
 ]
 
 ENV_VAR = "RAPID_BACKEND"
@@ -347,7 +348,12 @@ def _finish_epilogue_jnp(out, bias, residual, ep: Epilogue):
 
 
 def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
-                residual=None, epilogue: Optional[Epilogue] = None):
+                residual=None, epilogue: Optional[Epilogue] = None,
+                spec=None):
+    # spec is the kernel families' KernelSpec; the scan formulation has
+    # no block/pipeline geometry to configure, so it is accepted (the
+    # dispatchers pass one spec to every backend uniformly) and ignored.
+    del spec
     ep = as_epilogue(epilogue, activation)
     lut = fa.mul_lut_device(scheme)
     out = log_matmul_scan(x2, w2, lut, chunk)
@@ -356,13 +362,13 @@ def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
 
 def _matmul_pallas(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
                    residual=None, epilogue: Optional[Epilogue] = None,
-                   interpret: Optional[bool] = None):
+                   spec=None, interpret: Optional[bool] = None):
     # chunk is a jnp-path tuning knob; the kernel has its own block sizes.
     del chunk
     from repro.kernels.log_matmul.ops import log_matmul
 
     return log_matmul(x2, w2, scheme, bias=bias, activation=activation,
-                      residual=residual, epilogue=epilogue,
+                      residual=residual, epilogue=epilogue, spec=spec,
                       interpret=interpret)
 
 
@@ -377,45 +383,95 @@ def _matmul_pallas_interpret(x2, w2, scheme, **kw):
 # fused kernels evaluate the same expressions on their VMEM tiles).
 # --------------------------------------------------------------------------
 
-def _softmax_div_jnp(e, scheme, *, floor=SOFTMAX_FLOOR):
+def _softmax_div_jnp(e, scheme, *, floor=SOFTMAX_FLOOR, spec=None):
     """e / max(sum(e, -1), floor) with the RAPID divider.  f32 in/out."""
+    del spec
     return fdref.softmax_div_ref(e, fa.div_lut_device(scheme), floor)
 
 
-def _rms_div_jnp(x, eps, scheme):
+def _rms_div_jnp(x, eps, scheme, *, spec=None):
     """x / sqrt(mean(x^2, -1) + eps) with the RAPID divider.  f32."""
+    del spec
     return fdref.rms_div_ref(x, fa.div_lut_device(scheme), eps)
 
 
-def _div_pallas(a, b, scheme, *, interpret: Optional[bool] = None):
+def _div_jnp(a, b, scheme, *, spec=None):
+    """Elementwise RAPID divide (the LUT bit-twiddle, no kernel)."""
+    del spec
+    return fa.approx_div(a, b, scheme)
+
+
+def _div_pallas(a, b, scheme, *, spec=None,
+                interpret: Optional[bool] = None):
     from repro.kernels.fused_div.ops import fused_elementwise_div
 
-    return fused_elementwise_div(a, b, scheme, interpret=interpret)
+    return fused_elementwise_div(a, b, scheme, spec=spec,
+                                 interpret=interpret)
 
 
-def _div_pallas_interpret(a, b, scheme):
-    return _div_pallas(a, b, scheme, interpret=True)
+def _div_pallas_interpret(a, b, scheme, *, spec=None):
+    return _div_pallas(a, b, scheme, spec=spec, interpret=True)
 
 
-def _softmax_div_pallas(e, scheme, *, floor=SOFTMAX_FLOOR,
+def _softmax_div_pallas(e, scheme, *, floor=SOFTMAX_FLOOR, spec=None,
                         interpret: Optional[bool] = None):
     from repro.kernels.fused_div.ops import fused_softmax_div
 
-    return fused_softmax_div(e, scheme, floor=floor, interpret=interpret)
+    return fused_softmax_div(e, scheme, floor=floor, spec=spec,
+                             interpret=interpret)
 
 
-def _softmax_div_pallas_interpret(e, scheme, *, floor=SOFTMAX_FLOOR):
-    return _softmax_div_pallas(e, scheme, floor=floor, interpret=True)
+def _softmax_div_pallas_interpret(e, scheme, *, floor=SOFTMAX_FLOOR,
+                                  spec=None):
+    return _softmax_div_pallas(e, scheme, floor=floor, spec=spec,
+                               interpret=True)
 
 
-def _rms_div_pallas(x, eps, scheme, *, interpret: Optional[bool] = None):
+def _rms_div_pallas(x, eps, scheme, *, spec=None,
+                    interpret: Optional[bool] = None):
     from repro.kernels.fused_div.ops import fused_rms_div
 
-    return fused_rms_div(x, eps, scheme, interpret=interpret)
+    return fused_rms_div(x, eps, scheme, spec=spec, interpret=interpret)
 
 
-def _rms_div_pallas_interpret(x, eps, scheme):
-    return _rms_div_pallas(x, eps, scheme, interpret=True)
+def _rms_div_pallas_interpret(x, eps, scheme, *, spec=None):
+    return _rms_div_pallas(x, eps, scheme, spec=spec, interpret=True)
+
+
+# --------------------------------------------------------------------------
+# decode-attention family: one fused flash-decode step (score matmul,
+# online softmax stats, value matmul, floored RAPID combine divide) —
+# the flagship consumer of the pipelined kernels.  The jnp impl is the
+# canonical semantics (the kernel reproduces it to f32 tolerance; the
+# contractions are exact on both paths, only the combine divide is
+# approximate).
+# --------------------------------------------------------------------------
+
+def _decode_attn_jnp(qf, k_cache, v_cache, slot_positions, pos, window,
+                     scheme, *, floor=SOFTMAX_FLOOR, spec=None):
+    del spec
+    from repro.kernels.flash_attn.ref import decode_attn_ref
+
+    return decode_attn_ref(qf, k_cache, v_cache, slot_positions, pos,
+                           window, scheme, floor=floor)
+
+
+def _decode_attn_pallas(qf, k_cache, v_cache, slot_positions, pos, window,
+                        scheme, *, floor=SOFTMAX_FLOOR, spec=None,
+                        interpret: Optional[bool] = None):
+    from repro.kernels.flash_attn.ops import flash_decode_attn
+
+    return flash_decode_attn(qf, k_cache, v_cache, slot_positions, pos,
+                             window, scheme, floor=floor, spec=spec,
+                             interpret=interpret)
+
+
+def _decode_attn_pallas_interpret(qf, k_cache, v_cache, slot_positions,
+                                  pos, window, scheme, *,
+                                  floor=SOFTMAX_FLOOR, spec=None):
+    return _decode_attn_pallas(qf, k_cache, v_cache, slot_positions, pos,
+                               window, scheme, floor=floor, spec=spec,
+                               interpret=True)
 
 
 # --------------------------------------------------------------------------
@@ -428,9 +484,10 @@ class Backend:
 
     name: str
     matmul: Callable
-    div: Callable = field(default=fa.approx_div)
+    div: Callable = field(default=_div_jnp)
     softmax_div: Callable = field(default=_softmax_div_jnp)
     rms_div: Callable = field(default=_rms_div_jnp)
+    decode_attn: Callable = field(default=_decode_attn_jnp)
     description: str = ""
 
 
@@ -478,7 +535,8 @@ def dispatch_signature(name: str) -> Dict[str, str]:
         family: f"{fn.__module__}:{fn.__qualname__}"
         for family, fn in (("matmul", b.matmul), ("div", b.div),
                            ("softmax_div", b.softmax_div),
-                           ("rms_div", b.rms_div))
+                           ("rms_div", b.rms_div),
+                           ("decode_attn", b.decode_attn))
     }
 
 
@@ -637,20 +695,27 @@ def matmul(x2, w2, scheme, *, backend: Optional[str] = None, **kw):
     return get_backend(backend).matmul(x2, w2, scheme, **kw)
 
 
-def div(a, b, scheme, *, backend: Optional[str] = None):
+def div(a, b, scheme, *, backend: Optional[str] = None, **kw):
     """Registry-routed elementwise approximate divide."""
-    return get_backend(backend).div(a, b, scheme)
+    return get_backend(backend).div(a, b, scheme, **kw)
 
 
 def softmax_div(e, scheme, *, backend: Optional[str] = None,
-                floor: float = SOFTMAX_FLOOR):
+                floor: float = SOFTMAX_FLOOR, **kw):
     """Registry-routed fused softmax combine (see Backend.softmax_div)."""
-    return get_backend(backend).softmax_div(e, scheme, floor=floor)
+    return get_backend(backend).softmax_div(e, scheme, floor=floor, **kw)
 
 
-def rms_div(x, eps, scheme, *, backend: Optional[str] = None):
+def rms_div(x, eps, scheme, *, backend: Optional[str] = None, **kw):
     """Registry-routed fused rms normalize (see Backend.rms_div)."""
-    return get_backend(backend).rms_div(x, eps, scheme)
+    return get_backend(backend).rms_div(x, eps, scheme, **kw)
+
+
+def decode_attn(qf, k_cache, v_cache, slot_positions, pos, window, scheme,
+                *, backend: Optional[str] = None, **kw):
+    """Registry-routed fused decode attention (see Backend.decode_attn)."""
+    return get_backend(backend).decode_attn(
+        qf, k_cache, v_cache, slot_positions, pos, window, scheme, **kw)
 
 
 register_backend(Backend(
@@ -661,10 +726,12 @@ register_backend(Backend(
     div=_div_pallas,
     softmax_div=_softmax_div_pallas,
     rms_div=_rms_div_pallas,
-    description="Pallas TPU kernels (VMEM tiled, grid-pipelined)"))
+    decode_attn=_decode_attn_pallas,
+    description="Pallas TPU kernels (VMEM tiled, software-pipelined)"))
 register_backend(Backend(
     "pallas-interpret", _matmul_pallas_interpret,
     div=_div_pallas_interpret,
     softmax_div=_softmax_div_pallas_interpret,
     rms_div=_rms_div_pallas_interpret,
+    decode_attn=_decode_attn_pallas_interpret,
     description="Pallas kernels under the interpreter (CPU debug/CI)"))

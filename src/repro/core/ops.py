@@ -105,6 +105,7 @@ __all__ = [
     "qdiv",
     "qsoftmax_div",
     "qrms_div",
+    "qdecode_attn",
     "approx_softmax",
     "approx_rms_normalize",
     "approx_mean",
@@ -430,6 +431,36 @@ def _qrms_div_jvp(eps, scheme, backend, primals, tangents):
         jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
     _, tangent = jax.jvp(exact, (x,), (dx,))
     return _qrms_div_approx(x, eps, scheme, backend), tangent
+
+
+def qdecode_attn(
+    qf: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    slot_positions: jnp.ndarray,
+    pos,
+    window: int,
+    scheme: Optional[str],
+    backend: Optional[str] = None,
+    *,
+    floor: float = be.SOFTMAX_FLOOR,
+) -> jnp.ndarray:
+    """Fused single-token decode attention (registry family
+    ``decode_attn``).
+
+    qf: [B, KV, G, hd] *pre-scaled* f32 queries; caches: [B, C, KV, hd];
+    slot_positions: [B, C] absolute positions (MAX_INT = empty slot);
+    ``pos`` scalar or [B]-vector of current positions.  On the pallas
+    backends the score matmul, online softmax stats, value matmul and
+    the floored RAPID combine divide run as one flash kernel whose
+    intermediates never visit HBM; the jnp path is the exact-stats
+    reference with the same combine semantics.  Decode is inference-
+    only, so no custom gradient wrapper (the approximate divide inside
+    carries its own straight-through rule).  Returns [B, KV, G, hd] f32.
+    """
+    backend = be.resolve_backend_name(backend)
+    return be.decode_attn(qf, k_cache, v_cache, slot_positions, pos,
+                          window, scheme, backend=backend, floor=floor)
 
 
 def approx_softmax(

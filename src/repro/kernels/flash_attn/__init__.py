@@ -1,0 +1,3 @@
+from repro.kernels.flash_attn.ops import flash_decode_attn
+
+__all__ = ["flash_decode_attn"]

@@ -1,0 +1,69 @@
+"""jnp reference semantics for single-token (decode) attention.
+
+The canonical math the flash kernel reproduces: one query token per
+(batch, kv-head) row attends to a cache of ``C`` slots whose absolute
+positions live in ``slot_positions`` (``jnp.iinfo(int32).max`` marks an
+empty slot, which causality masks out).  ``decode_stats`` is the exact
+score/softmax-stats/value contraction — shared with the sequence-sharded
+flash-decode path in ``models/layers.py``, whose per-shard stats are
+these stats psum-combined — and ``decode_attn_ref`` finishes with the
+floored softmax divide (RAPID approximate when ``scheme`` is set).  The
+score and value contractions intentionally stay exact (the paper
+approximates weight matmuls and divides, not activation-activation
+contractions); only the combine divide is approximate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import float_approx as fa
+from repro.core.ops import exact_einsum
+from repro.kernels.fused_div.ref import SOFTMAX_FLOOR
+
+__all__ = ["SOFTMAX_FLOOR", "canon_posq", "decode_stats", "decode_attn_ref"]
+
+
+def canon_posq(pos) -> jnp.ndarray:
+    """Current-position arg (scalar | [B] | [B, 1]) -> [*, 1]-broadcastable."""
+    posq = jnp.asarray(pos)
+    if posq.ndim == 1:
+        posq = posq[:, None]
+    return posq
+
+
+def decode_stats(qf, kc, vc, sp, posq, window: int):
+    """Per-row softmax stats (m, l, acc) for one decode step.
+
+    qf: [B, KV, G, hd] pre-scaled f32 queries; kc/vc: [B, C, KV, hd];
+    sp: [B, C] absolute slot positions; posq: scalar or [B, 1].
+    Fully-masked rows yield m = -inf, l = 0, acc = 0.
+    """
+    s = exact_einsum("bkgh,bckh->bkgc", qf, kc.astype(jnp.float32))
+    mask = sp <= posq
+    if window:
+        mask &= sp > posq - window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1)
+    p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = exact_einsum("bkgc,bckh->bkgh", p, vc.astype(jnp.float32))
+    return m, l, acc
+
+
+def decode_attn_ref(qf, k_cache, v_cache, slot_positions, pos, window: int,
+                    scheme: Optional[str], *,
+                    floor: float = SOFTMAX_FLOOR) -> jnp.ndarray:
+    """Exact-stats decode attention with the (floored) softmax combine.
+
+    Returns [B, KV, G, hd] f32.  The same floor as the fused softmax_div
+    kernels, so fully-masked rows divide 0/floor = 0 instead of trapping.
+    """
+    posq = canon_posq(pos)
+    m, l, acc = decode_stats(qf, k_cache, v_cache, slot_positions, posq,
+                             window)
+    l = jnp.maximum(l, floor)
+    if scheme:
+        return fa.approx_div(acc, l[..., None], scheme)
+    return acc / l[..., None]  # audit: exact — the exact-softmax arm

@@ -6,6 +6,13 @@ Padding values are chosen so the pad lanes stay numerically inert (zeros
 in the reduced numerator, ones in elementwise denominators) and the pad
 rows cannot trap (0/floor = 0, sqrt(eps) > 0); everything padded is
 sliced off before return.
+
+Every wrapper accepts the shared :class:`repro.kernels.spec.KernelSpec`
+(``spec=``): ``bm`` overrides the slab-row heuristic and
+``spec.pipeline.depth`` selects the formulation — depth 1 the legacy
+grid loop, depth >= 2 (the default, ``budget.PIPELINE_BUFFERS``) the
+software-pipelined slab loop with explicit async-copy staging.  Both
+are bit-exact against each other and the jnp reference.
 """
 from __future__ import annotations
 
@@ -21,66 +28,86 @@ from repro.kernels.fused_div.fused_div import (
     rms_div_pallas,
     softmax_div_pallas,
 )
+from repro.kernels.spec import KernelSpec, as_kernel_spec
 
 __all__ = ["fused_softmax_div", "fused_rms_div", "fused_elementwise_div"]
 
 
-def _pick_bm(m: int, npad: int) -> int:
-    """Rows per grid step: >= the f32 sublane tile, capped so the in/out
+def _pick_bm(m: int, npad: int, depth: int = 1) -> int:
+    """Rows per slab: >= the f32 sublane tile, capped so the in/out
     slabs stay under ``budget.ROW_SLAB_BYTES`` each — the same constants
     the static kernel auditor (RPD005) enforces."""
     rows = budget.round_up(m, budget.SUBLANE)
     bm = max(budget.SUBLANE,
              min(budget.MAX_BM, budget.slab_rows(npad), rows))
-    # in + out slabs double-buffered, LUT single-buffered
-    budget.check_working_set(
-        2 * budget.PIPELINE_BUFFERS * budget.tile_bytes((bm, npad))
-        + budget.tile_bytes((256,)))
+    _check_budget(bm, npad, depth)
     return bm
 
 
-def _default_interpret(interpret: bool | None) -> bool:
+def _check_budget(bm: int, npad: int, depth: int) -> None:
+    # in + out slabs: grid double-buffered at depth 1, `depth` manual
+    # VMEM scratch slots per side at depth >= 2; LUT single-buffered
+    buffers = depth if depth >= 2 else budget.PIPELINE_BUFFERS
+    budget.check_working_set(
+        2 * buffers * budget.tile_bytes((bm, npad))
+        + budget.tile_bytes((256,)))
+
+
+def _resolve(spec, interpret):
+    ks = as_kernel_spec(spec)
     if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+        interpret = ks.interpret
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return ks, interpret
 
 
-def _as_rows(x: jnp.ndarray):
+def _as_rows(x: jnp.ndarray, ks: KernelSpec):
     """[..., n] -> padded [M_pad, n_pad] f32 + the unpad geometry."""
     lead, n = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, n).astype(jnp.float32)
     m = x2.shape[0]
     npad = ref.padded_width(n)
-    bm = _pick_bm(m, npad)
+    if ks.bm is not None:
+        bm = ks.bm
+        _check_budget(bm, npad, ks.depth)
+    else:
+        bm = _pick_bm(m, npad, ks.depth)
     mp = -(-m // bm) * bm
     xp = jnp.pad(x2, ((0, mp - m), (0, npad - n)))
     return xp, bm, m, n, lead
 
 
-def fused_softmax_div(e: jnp.ndarray, scheme: str, *,
+def fused_softmax_div(e: jnp.ndarray, scheme: str | None = None, *,
                       floor: float = ref.SOFTMAX_FLOOR,
+                      spec: KernelSpec | None = None,
                       interpret: bool | None = None) -> jnp.ndarray:
     """Softmax combine: e / max(sum(e, -1), floor), fused in one pass."""
-    interpret = _default_interpret(interpret)
+    ks, interpret = _resolve(spec, interpret)
+    scheme = scheme or ks.scheme or "rapid9"
     lut = fa.div_lut_device(scheme)
-    ep, bm, m, n, lead = _as_rows(e)
+    ep, bm, m, n, lead = _as_rows(e, ks)
     out = softmax_div_pallas(ep, lut, floor=float(floor), bm=bm,
-                             interpret=interpret)
+                             depth=ks.depth, interpret=interpret)
     return out[:m, :n].reshape(*lead, n).astype(e.dtype)
 
 
-def fused_rms_div(x: jnp.ndarray, eps: float, scheme: str, *,
+def fused_rms_div(x: jnp.ndarray, eps: float, scheme: str | None = None, *,
+                  spec: KernelSpec | None = None,
                   interpret: bool | None = None) -> jnp.ndarray:
     """RMS normalize: x / sqrt(mean(x^2, -1) + eps), fused in one pass."""
-    interpret = _default_interpret(interpret)
+    ks, interpret = _resolve(spec, interpret)
+    scheme = scheme or ks.scheme or "rapid9"
     lut = fa.div_lut_device(scheme)
-    xp, bm, m, n, lead = _as_rows(x)
+    xp, bm, m, n, lead = _as_rows(x, ks)
     out = rms_div_pallas(xp, lut, n=n, eps=float(eps), bm=bm,
-                         interpret=interpret)
+                         depth=ks.depth, interpret=interpret)
     return out[:m, :n].reshape(*lead, n).astype(x.dtype)
 
 
-def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str, *,
+def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray,
+                          scheme: str | None = None, *,
+                          spec: KernelSpec | None = None,
                           interpret: bool | None = None) -> jnp.ndarray:
     """Elementwise RAPID a/b (broadcasting ok); output dtype follows a.
 
@@ -88,9 +115,12 @@ def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str, *,
     as the online-softmax combine divides ``acc`` by ``l[..., None]``)
     dispatches to a row-broadcast kernel: ``b`` stays a vector and the
     lane broadcast happens in VMEM instead of materialising an a-sized
-    denominator tensor in HBM.
+    denominator tensor in HBM.  The tiled fallback for fully general
+    broadcasts has no slab structure to pipeline and always runs the
+    grid formulation.
     """
-    interpret = _default_interpret(interpret)
+    ks, interpret = _resolve(spec, interpret)
+    scheme = scheme or ks.scheme or "rapid9"
     lut = fa.div_lut_device(scheme)
     a = jnp.asarray(a)
     b = jnp.asarray(b)
@@ -99,13 +129,14 @@ def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray, scheme: str, *,
     rowbcast = (out_shape == a.shape and a.ndim >= 1
                 and (b.ndim == 0 or b.shape[-1] == 1))
     if rowbcast:
-        ap, bm, m, n, lead = _as_rows(a)
+        ap, bm, m, n, lead = _as_rows(a, ks)
         # [M_pad, 1] column: the denominator's row count lives on the
         # sublane axis where bm-alignment holds (see _div_rowbcast_kernel)
         bv = jnp.broadcast_to(b, (*a.shape[:-1], 1)).reshape(-1, 1)
         bv = jnp.pad(bv.astype(jnp.float32), ((0, ap.shape[0] - m), (0, 0)),
                      constant_values=1.0)
-        out = div_rowbcast_pallas(ap, bv, lut, bm=bm, interpret=interpret)
+        out = div_rowbcast_pallas(ap, bv, lut, bm=bm, depth=ks.depth,
+                                  interpret=interpret)
         return out[:m, :n].reshape(*lead, n).astype(orig)
     a, b = jnp.broadcast_arrays(a, b)
     shape = a.shape

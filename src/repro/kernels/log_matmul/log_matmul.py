@@ -11,10 +11,25 @@ is overlapped with VPU compute on the current tiles (a hardware-managed
 2-deep double buffer per operand — the TPU analogue of the paper's 2-/3-/
 4-stage configurations; see DESIGN.md SSPipelining).
 
-Grid layout: (M/bm, N/bn, K/bk); M, N are parallel, K is sequential and
-accumulates into the output tile (revisited across the K dimension).
-VMEM working set: bm*bk + bk*bn + bm*bn floats + the 1 KiB coefficient
-LUT.  MXU is untouched; arithmetic is pure VPU int32.
+Two formulations share the kernel arithmetic:
+
+  * ``log_matmul_pallas`` (pipeline depth 1) — grid (M/bm, N/bn, K/bk);
+    M, N are parallel, K is sequential and accumulates into the output
+    tile (revisited across the K dimension).  HBM->VMEM staging is left
+    to Mosaic's hardware-managed grid pipeline.
+  * ``log_matmul_pipelined`` (depth >= 2) — grid (M/bm, N/bn) with the
+    K loop *inside* the kernel: x and w stay in ANY (HBM) memory and
+    ``depth`` VMEM scratch slots per operand rotate through explicit
+    ``make_async_copy`` DMAs, so the copy for K block t+depth-1 is in
+    flight while block t's log-domain products compute — the explicit
+    software pipeline the paper implements with register stages.  The
+    accumulation order (zeros + block_0 + block_1 + ...) is identical
+    to the grid formulation, so the two are bit-exact against each
+    other and against the chunk=1 jnp scan.
+
+VMEM working set: bm*bk + bk*bn tiles (x depth when manually staged)
++ the bm*bn output tile + the 1 KiB coefficient LUT.  MXU is untouched;
+arithmetic is pure VPU int32.
 
 Fused epilogue menu: an optional composition of ``{bias, activation,
 residual-add, rms-normalize, softmax-combine}`` is applied to the output
@@ -38,6 +53,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.backend import Epilogue, apply_epilogue_tile
 
@@ -87,17 +103,8 @@ def _kernel(x_ref, w_ref, lut_ref, *rest, bk: int, unroll: int, nk: int,
 
     bx = jax.lax.bitcast_convert_type(x_ref[...], jnp.int32)  # [bm, bk]
     bw = jax.lax.bitcast_convert_type(w_ref[...], jnp.int32)  # [bk, bn]
-    lut = lut_ref[...]
-
-    def body(t, acc):
-        for u in range(unroll):
-            k = t * unroll + u
-            acc = acc + _approx_prod(bx[:, k][:, None], bw[k, :][None, :], lut)
-        return acc
-
-    acc = jnp.zeros_like(o_ref)
-    acc = jax.lax.fori_loop(0, bk // unroll, body, acc)
-    o_ref[...] += acc
+    o_ref[...] += _accumulate_block(bx, bw, lut_ref[...], o_ref[...],
+                                    bk, unroll)
 
     if has_bias or has_residual or not ep.is_identity:
         # epilogue menu on the tile's final K visit, while it sits in
@@ -114,6 +121,178 @@ def _kernel(x_ref, w_ref, lut_ref, *rest, bk: int, unroll: int, nk: int,
                 o_ref[...], pre_ref[...] = out
             else:
                 o_ref[...] = out
+
+
+def _accumulate_block(bx, bw, lut, out_like, bk: int, unroll: int):
+    """Zeros + sum of rank-1 slabs over one K block (the canonical
+    accumulation order both formulations and the chunk=1 scan share)."""
+
+    def body(t, acc):
+        for u in range(unroll):
+            kk = t * unroll + u
+            acc = acc + _approx_prod(bx[:, kk][:, None], bw[kk, :][None, :],
+                                     lut)
+        return acc
+
+    return jax.lax.fori_loop(0, bk // unroll, body, jnp.zeros_like(out_like))
+
+
+def _pipelined_kernel(x_hbm, w_hbm, lut_ref, *rest, bm: int, bn: int,
+                      bk: int, unroll: int, nk: int, depth: int,
+                      ep: Epilogue, has_bias: bool, has_residual: bool,
+                      n: int):
+    """One (bm, bn) output tile with the K loop software-pipelined.
+
+    x/w live in ANY (HBM) memory; ``depth`` VMEM slots per operand
+    rotate through explicit DMAs so the copy of K block t+depth-1
+    overlaps block t's compute.  Each K block is started exactly once
+    and waited exactly once, so the DMA semaphores balance per grid
+    step; the output tile is written once (no grid revisits).
+    """
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    res_ref = refs.pop(0) if has_residual else None
+    dlut_ref = refs.pop(0) if ep.wants_norm_lut else None
+    x_scr, w_scr, x_sem, w_sem = refs[-4:]
+    refs = refs[:-4]
+    if ep.keep_prenorm:
+        o_ref, pre_ref = refs
+    else:
+        (o_ref,) = refs
+
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def x_dma(slot, kk):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), pl.ds(kk * bk, bk)],
+            x_scr.at[slot], x_sem.at[slot])
+
+    def w_dma(slot, kk):
+        return pltpu.make_async_copy(
+            w_hbm.at[pl.ds(kk * bk, bk), pl.ds(j * bn, bn)],
+            w_scr.at[slot], w_sem.at[slot])
+
+    # warm-up: put the first depth-1 K blocks in flight
+    for d in range(depth - 1):
+        @pl.when(d < nk)
+        def _start(d=d):
+            x_dma(d % depth, d).start()
+            w_dma(d % depth, d).start()
+
+    lut = lut_ref[...]
+
+    def k_step(kk, acc):
+        slot = jax.lax.rem(kk, depth)
+        nxt = kk + depth - 1
+
+        @pl.when(nxt < nk)
+        def _prefetch():
+            x_dma(jax.lax.rem(nxt, depth), nxt).start()
+            w_dma(jax.lax.rem(nxt, depth), nxt).start()
+
+        x_dma(slot, kk).wait()
+        w_dma(slot, kk).wait()
+        bx = jax.lax.bitcast_convert_type(x_scr[slot], jnp.int32)
+        bw = jax.lax.bitcast_convert_type(w_scr[slot], jnp.int32)
+        return acc + _accumulate_block(bx, bw, lut, acc, bk, unroll)
+
+    acc = jax.lax.fori_loop(
+        0, nk, k_step, jnp.zeros((bm, bn), jnp.float32))
+
+    if has_bias or has_residual or not ep.is_identity:
+        out = apply_epilogue_tile(
+            acc,
+            bias_ref[...] if has_bias else None,
+            res_ref[...] if has_residual else None,
+            ep, n=n,
+            div_lut=dlut_ref[...] if dlut_ref is not None else None)
+        if ep.keep_prenorm:
+            o_ref[...], pre_ref[...] = out
+        else:
+            o_ref[...] = out
+    else:
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "unroll", "depth", "epilogue", "n",
+                     "interpret"),
+)
+def log_matmul_pipelined(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    lut: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    residual: jnp.ndarray | None = None,
+    div_lut: jnp.ndarray | None = None,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    unroll: int = 8,
+    depth: int = 2,
+    epilogue: Epilogue = Epilogue(),
+    n: int | None = None,
+    interpret: bool = False,
+):
+    """Software-pipelined x[M,K] @ w[K,N_pad]; contract as
+    :func:`log_matmul_pallas` plus ``depth`` explicit DMA slots."""
+    m, k = x.shape
+    _, npad = w.shape
+    if n is None:
+        n = npad
+    if epilogue.norm is not None and bn != npad:
+        raise ValueError(
+            f"norm epilogue needs whole rows per tile: bn={bn} != N={npad}")
+    if epilogue.wants_norm_lut and div_lut is None:
+        raise ValueError("epilogue.div_scheme set but no div_lut operand")
+    grid = (m // bm, npad // bn)
+    nk = k // bk
+    has_bias = bias is not None
+    has_residual = residual is not None
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    in_specs = [
+        any_spec,                                    # x: manual DMA
+        any_spec,                                    # w: manual DMA
+        pl.BlockSpec((256,), lambda i, j: (0,)),     # mul LUT
+    ]
+    operands = [x, w, lut]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (j,)))
+        operands.append(bias)
+    if has_residual:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j: (i, j)))
+        operands.append(residual)
+    if epilogue.wants_norm_lut:
+        in_specs.append(pl.BlockSpec((256,), lambda i, j: (0,)))
+        operands.append(div_lut)
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, npad), jnp.float32)
+    if epilogue.keep_prenorm:
+        out_specs, out_shapes = [out_spec, out_spec], [out_shape, out_shape]
+    else:
+        out_specs, out_shapes = out_spec, out_shape
+    return pl.pallas_call(
+        functools.partial(_pipelined_kernel, bm=bm, bn=bn, bk=bk,
+                          unroll=unroll, nk=nk, depth=depth, ep=epilogue,
+                          has_bias=has_bias, has_residual=has_residual, n=n),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((depth, bm, bk), jnp.float32),
+            pltpu.VMEM((depth, bk, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel"))
+        ) if not interpret else None,
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(

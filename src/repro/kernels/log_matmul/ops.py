@@ -8,7 +8,11 @@ from repro.core import float_approx as fa
 from repro.core.backend import Epilogue, as_epilogue
 from repro.kernels import budget
 from repro.kernels.fused_div import ref as fdref
-from repro.kernels.log_matmul.log_matmul import log_matmul_pallas
+from repro.kernels.log_matmul.log_matmul import (
+    log_matmul_pallas,
+    log_matmul_pipelined,
+)
+from repro.kernels.spec import KernelSpec, as_kernel_spec
 
 __all__ = ["log_matmul"]
 
@@ -34,17 +38,23 @@ def _pick_blocks(m: int, n: int, k: int):
 
 
 def _check_budget(bm: int, bn: int, bk: int, ep: Epilogue,
-                  has_bias: bool, has_residual: bool) -> None:
-    """Fail an oversized block choice (explicit ``blocks=`` included)
-    at call time with the same constant the auditor ratchets on."""
-    tiles = [(bm, bk), (bk, bn), (bm, bn)]            # x, w, out
-    if has_residual:
-        tiles.append((bm, bn))
-    if ep.keep_prenorm:
-        tiles.append((bm, bn))
-    working = sum(budget.PIPELINE_BUFFERS * budget.tile_bytes(t)
-                  for t in tiles)
-    working += budget.tile_bytes((256,))              # mul LUT
+                  has_bias: bool, has_residual: bool,
+                  depth: int = 1) -> None:
+    """Fail an oversized block choice (explicit spec blocks included)
+    at call time with the same constant the auditor ratchets on.
+
+    At depth 1 the x/w tiles are hardware double-buffered by the Mosaic
+    grid pipeline (``PIPELINE_BUFFERS`` copies); at depth >= 2 they are
+    manual VMEM scratch slots, ``depth`` copies each, and nothing else
+    buffers them.  Output-row tiles stay grid-BlockSpec'd either way.
+    """
+    xw_buffers = depth if depth >= 2 else budget.PIPELINE_BUFFERS
+    working = xw_buffers * (budget.tile_bytes((bm, bk))
+                            + budget.tile_bytes((bk, bn)))
+    row_tiles = 1 + has_residual + ep.keep_prenorm       # out, res, pre
+    working += budget.PIPELINE_BUFFERS * row_tiles * budget.tile_bytes(
+        (bm, bn))
+    working += budget.tile_bytes((256,))                 # mul LUT
     if has_bias:
         working += budget.PIPELINE_BUFFERS * budget.tile_bytes((bn,))
     if ep.wants_norm_lut:
@@ -55,12 +65,13 @@ def _check_budget(bm: int, bn: int, bk: int, ep: Epilogue,
 def log_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
-    scheme: str = "rapid10",
+    scheme: str | None = None,
     *,
     bias: jnp.ndarray | None = None,
     activation: str | None = None,
     residual: jnp.ndarray | None = None,
     epilogue: Epilogue | None = None,
+    spec: KernelSpec | None = None,
     blocks=None,
     interpret: bool | None = None,
 ):
@@ -71,16 +82,32 @@ def log_matmul(
     stages; ``activation=`` remains the activation-only sugar) are fused
     into the kernel's output-tile epilogue on its last K visit.  Norm
     epilogues force whole lane-padded rows per output tile so the
-    canonical padded-row denominator semantics hold.  Returns the tail,
-    or ``(tail, pre_norm)`` when ``epilogue.keep_prenorm``.
+    canonical padded-row denominator semantics hold.
+
+    ``spec`` (:class:`repro.kernels.spec.KernelSpec`) carries block
+    sizes, pipeline depth, scheme/epilogue defaults and interpret mode
+    uniformly across the kernel families; explicit keyword arguments
+    override its fields.  Depth >= 2 (the default,
+    ``budget.PIPELINE_BUFFERS``) dispatches to the software-pipelined
+    kernel whose next K-block DMA overlaps the current block's compute;
+    depth 1 keeps the legacy grid formulation.  Both are bit-exact
+    against each other and the chunk=1 jnp scan.  ``blocks=`` tuples
+    are deprecated (converted with a warning).  Returns the tail, or
+    ``(tail, pre_norm)`` when ``epilogue.keep_prenorm``.
     """
+    ks = as_kernel_spec(spec, blocks=blocks)
+    scheme = scheme or ks.scheme or "rapid10"
+    if epilogue is None:
+        epilogue = ks.epilogue
+    if interpret is None:
+        interpret = ks.interpret
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     ep = as_epilogue(epilogue, activation)
     lut = fa.mul_lut_device(scheme)
     m, k = x.shape
     _, n = w.shape
-    bm, bn, bk = blocks or _pick_blocks(m, n, k)
+    bm, bn, bk = ks.blocks_or(*_pick_blocks(m, n, k))
     if ep.norm is not None:
         # whole lane-padded rows per output tile (canonical denominator
         # semantics); rebalance bm/bk so the VMEM working set stays
@@ -89,7 +116,9 @@ def log_matmul(
         bn = fdref.padded_width(n)
         bm = max(budget.SUBLANE, min(bm, budget.slab_rows(bn)))
         bk = max(budget.LANE, min(bk, budget.slab_depth(bn)))
-    _check_budget(bm, bn, bk, ep, bias is not None, residual is not None)
+    depth = ks.depth
+    _check_budget(bm, bn, bk, ep, bias is not None, residual is not None,
+                  depth=depth)
     unroll = 8 if bk % 8 == 0 else 1
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     xp = jnp.pad(x.astype(jnp.float32), ((0, pm), (0, pk)))
@@ -101,9 +130,15 @@ def log_matmul(
     if residual is not None:
         rp = jnp.pad(residual.astype(jnp.float32), ((0, pm), (0, pn)))
     dlut = fa.div_lut_device(ep.div_scheme) if ep.wants_norm_lut else None
-    out = log_matmul_pallas(xp, wp, lut, bp, rp, dlut, bm=bm, bn=bn, bk=bk,
-                            unroll=min(unroll, bk), epilogue=ep, n=n,
-                            interpret=interpret)
+    if depth >= 2:
+        out = log_matmul_pipelined(
+            xp, wp, lut, bp, rp, dlut, bm=bm, bn=bn, bk=bk,
+            unroll=min(unroll, bk), depth=depth, epilogue=ep, n=n,
+            interpret=interpret)
+    else:
+        out = log_matmul_pallas(
+            xp, wp, lut, bp, rp, dlut, bm=bm, bn=bn, bk=bk,
+            unroll=min(unroll, bk), epilogue=ep, n=n, interpret=interpret)
     if ep.keep_prenorm:
         return out[0][:m, :n], out[1][:m, :n]
     return out[:m, :n]

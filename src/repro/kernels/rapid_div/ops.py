@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import mitchell, schemes
 from repro.kernels.rapid_div.rapid_div import rapid_div_pallas
+from repro.kernels.spec import KernelSpec, as_kernel_spec
 
 __all__ = ["rapid_div"]
 
@@ -13,11 +14,23 @@ __all__ = ["rapid_div"]
 def rapid_div(
     a: jnp.ndarray,
     b: jnp.ndarray,
-    scheme: str = "rapid9",
+    scheme: str | None = None,
     n_bits: int = 8,
     interpret: bool | None = None,
+    *,
+    spec: KernelSpec | None = None,
 ) -> jnp.ndarray:
-    """Elementwise RAPID a/b: a < 2**(2*n_bits), b < 2**n_bits."""
+    """Elementwise RAPID a/b: a < 2**(2*n_bits), b < 2**n_bits.
+
+    Accepts the shared :class:`repro.kernels.spec.KernelSpec` for
+    scheme/interpret/block defaults; like :func:`rapid_mul`, the
+    single-pass elementwise map has no software pipeline, so
+    ``spec.pipeline.depth`` is ignored.
+    """
+    ks = as_kernel_spec(spec)
+    scheme = scheme or ks.scheme or "rapid9"
+    if interpret is None:
+        interpret = ks.interpret
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     # memoized per (scheme, n_bits): one host build + one upload ever
@@ -25,7 +38,7 @@ def rapid_div(
     shape = a.shape
     af = a.reshape(-1).astype(jnp.uint32)
     bf = b.reshape(-1).astype(jnp.uint32)
-    bc, br = 128, 8
+    bc, br = ks.bn or 128, ks.bm or 8
     pad = (-af.size) % (br * bc)
     af = jnp.pad(af, (0, pad), constant_values=1).reshape(-1, bc)
     bf = jnp.pad(bf, (0, pad), constant_values=1).reshape(-1, bc)

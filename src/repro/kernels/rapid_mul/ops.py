@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.core import mitchell, schemes
 from repro.kernels.rapid_mul.rapid_mul import rapid_mul_pallas
+from repro.kernels.spec import KernelSpec, as_kernel_spec
 
 __all__ = ["rapid_mul"]
 
@@ -13,11 +14,24 @@ __all__ = ["rapid_mul"]
 def rapid_mul(
     a: jnp.ndarray,
     b: jnp.ndarray,
-    scheme: str = "rapid10",
+    scheme: str | None = None,
     n_bits: int = 16,
     interpret: bool | None = None,
+    *,
+    spec: KernelSpec | None = None,
 ) -> jnp.ndarray:
-    """Elementwise RAPID approximate product of unsigned ints < 2**n_bits."""
+    """Elementwise RAPID approximate product of unsigned ints < 2**n_bits.
+
+    Accepts the shared :class:`repro.kernels.spec.KernelSpec` for
+    scheme/interpret/block defaults; the integer unit is a single-pass
+    elementwise map, so ``spec.pipeline.depth`` has no software pipeline
+    to select and is ignored (the grid pipeline already overlaps tile
+    DMA with compute).
+    """
+    ks = as_kernel_spec(spec)
+    scheme = scheme or ks.scheme or "rapid10"
+    if interpret is None:
+        interpret = ks.interpret
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     # memoized per (scheme, n_bits): one host build + one upload ever
@@ -25,8 +39,8 @@ def rapid_mul(
     shape = a.shape
     af = a.reshape(-1).astype(jnp.uint32)
     bf = b.reshape(-1).astype(jnp.uint32)
-    bc = 128
-    br = 8
+    bc = ks.bn or 128
+    br = ks.bm or 8
     pad = (-af.size) % (br * bc)
     af = jnp.pad(af, (0, pad)).reshape(-1, bc)
     bf = jnp.pad(bf, (0, pad)).reshape(-1, bc)

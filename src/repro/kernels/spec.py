@@ -1,0 +1,117 @@
+"""Shared kernel-call contract: one spec from call site to auditor.
+
+Every kernel-family public wrapper (``log_matmul``, the ``fused_*_div``
+trio, ``rapid_mul``/``rapid_div``, ``flash_decode_attn``) accepts the
+same :class:`KernelSpec`, and ``core/backend.py``'s dispatchers and the
+kernel auditor's capture drivers pass the same object through — block
+geometry, pipeline depth, interpret mode, scheme and epilogue are one
+hashable value instead of a family-specific kwarg soup.
+
+Both dataclasses are frozen (hashable), so a spec can ride ``jax.jit``
+static arguments and ``functools.partial`` keywords unchanged.
+
+Pipeline semantics (:class:`PipelineSpec`):
+
+  * ``depth == 1`` — the legacy grid formulation: one tile per grid
+    step, HBM->VMEM staging left to Mosaic's hardware-managed grid
+    pipeline (which itself double-buffers grid-varying operands).
+  * ``depth >= 2`` — explicit software pipelining: the wrapper lowers
+    to the manual async-copy kernel, which keeps operands in ANY
+    (HBM) memory and rotates ``depth`` VMEM scratch slots per operand,
+    starting the DMA for tile ``t+depth-1`` before computing tile
+    ``t`` (the paper's pipelined-unit schedule, one slot per stage).
+
+The default depth is :data:`repro.kernels.budget.PIPELINE_BUFFERS`, so
+the software-pipelined path is the production default and the budget
+module stays the single source of truth for buffer counts.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple, Union
+
+from repro.kernels import budget
+
+__all__ = ["PipelineSpec", "KernelSpec", "as_kernel_spec"]
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """How deep the software pipeline stages HBM->VMEM tile copies."""
+
+    #: number of VMEM scratch slots per pipelined operand; 1 disables
+    #: the manual pipeline (hardware grid double-buffering only)
+    depth: int = budget.PIPELINE_BUFFERS
+
+    def __post_init__(self):
+        if not 1 <= int(self.depth) <= 8:
+            raise ValueError(
+                f"pipeline depth {self.depth} outside [1, 8] "
+                "(deeper than 8 slots has no VMEM headroom)")
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Uniform kernel-call spec shared by every kernel family.
+
+    ``bm``/``bn``/``bk`` name what the legacy positional ``blocks=``
+    tuples carried: rows / lanes / contraction depth per tile.  A
+    ``None`` field defers to the family's budget-derived heuristic
+    (``_pick_blocks`` / ``_pick_bm``); families without a K dimension
+    (the fused dividers, the integer units) ignore ``bk``.
+    ``interpret=None`` keeps the per-wrapper CPU autodetect.
+    """
+
+    bm: Optional[int] = None
+    bn: Optional[int] = None
+    bk: Optional[int] = None
+    pipeline: PipelineSpec = field(default_factory=PipelineSpec)
+    interpret: Optional[bool] = None
+    scheme: Optional[str] = None
+    epilogue: Optional[object] = None  # repro.core.backend.Epilogue
+
+    @property
+    def depth(self) -> int:
+        return int(self.pipeline.depth)
+
+    def with_depth(self, depth: int) -> "KernelSpec":
+        return replace(self, pipeline=PipelineSpec(depth=depth))
+
+    def blocks_or(self, bm: int, bn: int, bk: int) -> Tuple[int, int, int]:
+        """Fill unset block fields from a family heuristic's choice."""
+        return (self.bm or bm, self.bn or bn, self.bk or bk)
+
+
+def as_kernel_spec(
+    spec: Union[KernelSpec, Tuple[int, ...], None],
+    *,
+    blocks: Optional[Tuple[int, ...]] = None,
+) -> KernelSpec:
+    """Canonicalize a wrapper's ``spec=`` / legacy ``blocks=`` arguments.
+
+    One-release shim: a positional ``(bm, bn, bk)`` (or ``(bm,)`` /
+    ``(bm, bn)``) tuple — passed either as ``blocks=`` or directly as
+    ``spec=`` — still works but warns with ``DeprecationWarning``;
+    named :class:`KernelSpec` fields are the supported surface.
+    """
+    if blocks is not None and spec is not None:
+        raise ValueError("pass spec= or the deprecated blocks=, not both")
+    if blocks is not None:
+        spec = tuple(blocks)
+    if spec is None:
+        return KernelSpec()
+    if isinstance(spec, KernelSpec):
+        return spec
+    if isinstance(spec, (tuple, list)):
+        warnings.warn(
+            "positional blocks=(bm, bn, bk) tuples are deprecated; pass "
+            "spec=KernelSpec(bm=..., bn=..., bk=...) instead",
+            DeprecationWarning, stacklevel=3)
+        dims = tuple(int(b) for b in spec)
+        if not 1 <= len(dims) <= 3:
+            raise ValueError(f"blocks tuple {spec!r} must have 1-3 entries")
+        bm, bn, bk = (dims + (None, None, None))[:3]
+        return KernelSpec(bm=bm, bn=bn, bk=bk)
+    raise TypeError(
+        f"spec must be a KernelSpec or a (bm, bn, bk) tuple, got {spec!r}")

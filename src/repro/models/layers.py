@@ -17,7 +17,15 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import ApproxConfig, ModelConfig
 from repro.core.backend import SOFTMAX_FLOOR, Epilogue
-from repro.core.ops import exact_einsum, qdiv, qmatmul, qrms_div, qsoftmax_div
+from repro.core.ops import (
+    exact_einsum,
+    qdecode_attn,
+    qdiv,
+    qmatmul,
+    qrms_div,
+    qsoftmax_div,
+)
+from repro.kernels.flash_attn.ref import decode_stats
 from repro.models.params import P
 
 __all__ = [
@@ -385,6 +393,13 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
     depth).  When ``seq_shard_axis`` is given the cache length axis is
     sharded over that mesh axis and partial softmax stats are combined
     with collectives (flash-decode) — used by the 500k-context cells.
+
+    The unsharded path routes the registry's ``decode_attn`` family: on
+    the pallas backends the score matmul, online softmax stats, value
+    matmul and the RAPID combine divide fuse into one flash kernel (no
+    separate matmul + combine passes); the jnp backend is the exact-
+    stats reference with identical combine semantics.  The softmax site
+    selects the backend, as it owns the only approximate op here.
     """
     B, H, hd = q.shape
     KV = k_cache.shape[2]
@@ -402,21 +417,10 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
                 "sequence-sharded flash-decode path")
         posq = posq[:, None]
 
-    def local_stats(qc, kc, vc, sp):
-        s = exact_einsum("bkgh,bckh->bkgc", qc, kc.astype(jnp.float32))
-        mask = sp <= posq
-        if window:
-            mask &= sp > posq - window
-        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
-        m = s.max(axis=-1)
-        p = jnp.where(jnp.isfinite(m)[..., None], jnp.exp(s - m[..., None]), 0.0)
-        l = p.sum(axis=-1)
-        acc = exact_einsum("bkgc,bckh->bkgh", p, vc.astype(jnp.float32))
-        return m, l, acc
-
     if seq_shard_axis is None:
-        m, l, acc = local_stats(qf, k_cache, v_cache, slot_positions)
-        out = _online_softmax_combine(acc, l, m, acfg)
+        out = qdecode_attn(qf, k_cache, v_cache, slot_positions, posq,
+                           window, acfg.div("softmax"),
+                           backend=acfg.backend_for("softmax"))
     else:
         from repro.compat import shard_map
         from repro.core import backend as be
@@ -436,7 +440,7 @@ def decode_attention(q, k_cache, v_cache, slot_positions, pos, window: int,
             acfg_local = be.resolve_site_device_local(acfg, "softmax")
 
         def shmap_body(qc, kc, vc, sp):
-            m, l, acc = local_stats(qc, kc, vc, sp)
+            m, l, acc = decode_stats(qc, kc, vc, sp, posq, window)
             m_g = jax.lax.pmax(m, seq_shard_axis)
             corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
             l_g = jax.lax.psum(l * corr, seq_shard_axis)

@@ -152,6 +152,37 @@ def test_rpd004_backend_for_ok():
 
 
 # --------------------------------------------------------------------------
+# RPD009 — deprecated ApproxConfig.backend / .matmul_backend aliases
+# --------------------------------------------------------------------------
+
+def test_rpd009_deprecated_alias_reads():
+    got = lint("""
+        def f(acfg):
+            return acfg.backend
+    """)
+    assert rules_of(got) == ["RPD009"]
+    # .matmul_backend is unambiguous: flagged on any base expression
+    got = lint("""
+        def f(model):
+            return model.cfg.approx.matmul_backend
+    """)
+    assert rules_of(got) == ["RPD009"]
+
+
+def test_rpd009_ignores_unrelated_backend_attrs():
+    # engine/args objects carry .backend too; only ApproxConfig-shaped
+    # base names are the deprecated alias
+    got = lint("""
+        def f(self, args):
+            name = args.backend
+            self.backend = be.pin_backends(self.model.cfg.approx,
+                                           args.backend)
+            return acfg.backend_for("mlp")
+    """)
+    assert got == []
+
+
+# --------------------------------------------------------------------------
 # misc: syntax errors surface as findings; zone mapping
 # --------------------------------------------------------------------------
 
@@ -166,7 +197,7 @@ def test_zone_of():
 
 
 def test_rules_table_complete():
-    assert set(RULES) == {"RPD001", "RPD002", "RPD003", "RPD004"}
+    assert set(RULES) == {"RPD001", "RPD002", "RPD003", "RPD004", "RPD009"}
 
 
 # --------------------------------------------------------------------------

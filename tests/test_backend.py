@@ -545,17 +545,23 @@ def test_per_site_backend_overrides(monkeypatch):
 
 
 def test_backend_alias_and_site_map():
-    """`backend`/`matmul_backend` stay as read-only aliases for the
-    default entry; with_backends merges; unknown sites raise."""
+    """`backend`/`matmul_backend` survive one more release as read-only
+    aliases for the default entry, but warn on every read (lint rule
+    RPD009 flags source sites); with_backends merges; unknown sites
+    raise."""
     from repro.configs.base import ApproxConfig
 
     acfg = ApproxConfig(backends="jnp")
-    assert acfg.backend == "jnp" and acfg.matmul_backend == "jnp"
+    with pytest.warns(DeprecationWarning, match="ApproxConfig.backend "):
+        assert acfg.backend == "jnp"
+    with pytest.warns(DeprecationWarning, match="matmul_backend"):
+        assert acfg.matmul_backend == "jnp"
     assert acfg.backend_for("mlp") == "jnp"  # defers to default
     merged = acfg.with_backends({"mlp": "pallas-interpret"})
     assert merged.backend_for("mlp") == "pallas-interpret"
     assert merged.backend_for("norm") == "jnp"  # default preserved
-    assert merged.backend == "jnp"
+    with pytest.warns(DeprecationWarning):
+        assert merged.backend == "jnp"
     # an explicit per-site "auto" defers to the default entry, exactly
     # like an absent entry (it must NOT leapfrog straight to env/hw)
     explicit_auto = ApproxConfig(backends={"mlp": "auto", "default": "jnp"})
@@ -770,7 +776,8 @@ def test_registered_sites_covers_config_sites():
 
 def test_dispatch_signature_resolves_families():
     sig = be.dispatch_signature("jnp")
-    assert set(sig) == {"matmul", "div", "softmax_div", "rms_div"}
+    assert set(sig) == {"matmul", "div", "softmax_div", "rms_div",
+                        "decode_attn"}
     for target in sig.values():
         mod, sep, qual = target.partition(":")
         assert sep and mod and qual, target

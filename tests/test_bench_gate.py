@@ -52,7 +52,8 @@ def test_new_benchmarks_are_not_gated():
     got = {"a": {"status": "ok", "wall_s": 1.0},
            "brand_new": {"status": "failed", "wall_s": 0.0}}
     # the failed *new* module still fails the run via the harness exit
-    # code; the baseline diff itself only gates known benchmarks
+    # code; the baseline diff itself only gates known benchmarks (the
+    # harness then auto-records new *ok* modules — see the CLI tests)
     assert compare_to_baseline(got, base, tolerance=4.0) == []
 
 
@@ -87,3 +88,38 @@ def test_cli_baseline_diff_exit_codes(tmp_path):
         capture_output=True, text=True, timeout=300)
     assert r.returncode == 1
     assert "did not run" in r.stdout
+
+
+def test_cli_auto_records_new_benchmark(tmp_path):
+    """A module with no baseline row skips the gate once; a gated run
+    must fold it into the artifact so the *second* run gates it —
+    otherwise new benchmarks stay ungated forever."""
+    baseline = tmp_path / "base.json"
+    baseline.write_text(json.dumps({"smoke": True, "benchmarks": {}}))
+    cmd = [sys.executable, "-m", "benchmarks.run", "roofline_report",
+           "--smoke", "--baseline", str(baseline)]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "recorded new benchmark 'roofline_report'" in r.stdout
+    row = json.loads(baseline.read_text())["benchmarks"]["roofline_report"]
+    assert row["status"] == "ok" and row["wall_s"] >= 0.0
+    # second run: the row exists, so the diff gates it for real
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "benchmark gate OK" in r.stdout
+    assert "recorded new benchmark" not in r.stdout
+
+
+def test_cli_auto_record_skips_mode_mismatch(tmp_path):
+    """Smoke and full walls differ by orders of magnitude: a smoke run
+    against a full-mode baseline must not seed rows the full gate would
+    later compare against."""
+    baseline = tmp_path / "base.json"
+    baseline.write_text(json.dumps({"smoke": False, "benchmarks": {}}))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "roofline_report",
+         "--smoke", "--baseline", str(baseline)],
+        capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0
+    assert "recorded new benchmark" not in r.stdout
+    assert json.loads(baseline.read_text())["benchmarks"] == {}

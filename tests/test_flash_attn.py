@@ -1,0 +1,162 @@
+"""Fused flash-decode attention kernel vs the jnp reference.
+
+The kernel replaces the separate score-matmul + mask + softmax-stats +
+value-matmul + combine passes of ``models/layers.py::decode_attention``
+with one pipelined Pallas kernel.  Contract points under test: exact
+agreement with the reference when the whole cache fits one chunk (the
+schedules coincide), tight allclose across chunk boundaries (online
+max reassociates), the empty-slot / causality / sliding-window masks,
+vector and scalar query positions, the RAPID divider combine, the
+KernelSpec depth / chunk knobs, and registry dispatch through
+``core.ops.qdecode_attn``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.ops import flash_decode_attn
+from repro.kernels.flash_attn.ref import canon_posq, decode_attn_ref
+from repro.kernels.spec import KernelSpec, PipelineSpec
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _case(rng, b=2, c=192, kv=2, g=4, hd=64, maxpos=300):
+    qf = jnp.asarray(rng.normal(size=(b, kv, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    sp = jnp.asarray(rng.integers(0, maxpos, size=(b, c)), jnp.int32)
+    return qf, k, v, sp
+
+
+def _spec(depth=None, bc=None):
+    pipe = PipelineSpec(depth=depth) if depth else PipelineSpec()
+    return KernelSpec(bk=bc, pipeline=pipe)
+
+
+def test_single_chunk_bitexact_vs_ref(rng):
+    """Cache fits one 128-slot chunk: the online schedule degenerates to
+    the reference's global max/sum, so parity is bit-for-bit."""
+    qf, k, v, sp = _case(rng, c=128)
+    for scheme in (None, "rapid9"):
+        ref = decode_attn_ref(qf, k, v, sp, 200, 0, scheme)
+        got = flash_decode_attn(qf, k, v, sp, 200, 0, scheme,
+                                interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.int32), np.asarray(ref).view(np.int32))
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+@pytest.mark.parametrize("scheme", [None, "rapid9", "mitchell"])
+def test_multi_chunk_allclose_vs_ref(scheme, depth, rng):
+    qf, k, v, sp = _case(rng, c=300)
+    ref = decode_attn_ref(qf, k, v, sp, 250, 0, scheme)
+    got = flash_decode_attn(qf, k, v, sp, 250, 0, scheme,
+                            spec=_spec(depth=depth), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_vector_positions_and_window(rng):
+    """Per-batch query positions and a sliding window must mask exactly
+    like the reference (window excludes slots <= pos - window)."""
+    qf, k, v, sp = _case(rng, b=3, c=160, maxpos=500)
+    pos = jnp.asarray([100, 300, 450], jnp.int32)
+    for window in (0, 64):
+        ref = decode_attn_ref(qf, k, v, sp, pos, window, "rapid9")
+        got = flash_decode_attn(qf, k, v, sp, pos, window, "rapid9",
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_empty_and_future_slots_are_ignored(rng):
+    """INT32_MAX (ring-cache empty) and future-position slots carry
+    garbage values; the causality mask must keep them out of the
+    softmax stats — including the padded tail the wrapper adds."""
+    qf, k, v, sp = _case(rng, c=100)  # pads to 128: tail slots
+    empty = jnp.iinfo(jnp.int32).max
+    sp = sp.at[:, 5].set(empty).at[:, 17].set(250)  # pos below excludes both
+    k = k.at[:, 5].set(1e9).at[:, 17].set(1e9)
+    v = v.at[:, 5].set(1e9).at[:, 17].set(1e9)
+    ref = decode_attn_ref(qf, k, v, sp, 200, 0, None)
+    got = flash_decode_attn(qf, k, v, sp, 200, 0, None, interpret=True)
+    assert bool(jnp.isfinite(got).all())
+    # padding widens the row reduction (100 -> 128 lanes) so the sum
+    # tree reassociates vs the unpadded reference: ULP-level, not 1e9
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-6, atol=2e-7)
+
+
+def test_no_visible_slots_hits_floor(rng):
+    """pos below every slot position: l clamps to the softmax floor and
+    the output is finite zeros, not NaN from 0/0."""
+    qf, k, v, sp = _case(rng, c=128, maxpos=300)
+    out = flash_decode_attn(qf, k, v, sp + 1000, 200, 0, None,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_cache_chunk_knob_changes_schedule_not_numbers(rng):
+    """spec.bk picks the cache chunk; 256 covers the padded cache in one
+    chunk so it must be bit-exact vs the 2-chunk default schedule's
+    reference, and reject non-lane multiples."""
+    qf, k, v, sp = _case(rng, c=256)
+    ref = decode_attn_ref(qf, k, v, sp, 250, 0, None)
+    got = flash_decode_attn(qf, k, v, sp, 250, 0, None,
+                            spec=_spec(bc=256), interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(ref).view(np.int32))
+    with pytest.raises(ValueError, match="multiple of"):
+        flash_decode_attn(qf, k, v, sp, 250, 0, None, spec=_spec(bc=100),
+                          interpret=True)
+
+
+def test_qdecode_attn_registry_dispatch(rng):
+    """core.ops.qdecode_attn routes through the backend registry: the
+    jnp row is the reference, pallas-interpret the fused kernel."""
+    from repro.core.ops import qdecode_attn
+
+    qf, k, v, sp = _case(rng, c=128)
+    ref = qdecode_attn(qf, k, v, sp, 200, 0, "rapid9", backend="jnp")
+    got = qdecode_attn(qf, k, v, sp, 200, 0, "rapid9",
+                       backend="pallas-interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(ref).view(np.int32))
+
+
+def test_canon_posq_shapes():
+    assert canon_posq(5).shape == ()          # scalar broadcasts as-is
+    assert canon_posq(jnp.asarray([1, 2, 3])).shape == (3, 1)
+    assert canon_posq(jnp.asarray([[7], [8]])).shape == (2, 1)
+
+
+def test_decode_attention_layer_uses_fused_kernel(rng):
+    """models.layers.decode_attention on the pallas-interpret backend
+    lowers to a single fused pallas_call (no separate combine pass) and
+    agrees with the jnp path."""
+    from repro.analysis.capture import capture_pallas_calls
+    from repro.configs.base import ApproxConfig
+    from repro.models import layers
+
+    b, kv, g, hd, c = 2, 2, 2, 32, 64
+    q = jnp.asarray(rng.normal(size=(b, kv * g, hd)), jnp.float32)
+    k_cache = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    v_cache = jnp.asarray(rng.normal(size=(b, c, kv, hd)), jnp.float32)
+    sp = jnp.asarray(rng.integers(0, 40, size=(b, c)), jnp.int32)
+
+    def run(backends):
+        acfg = ApproxConfig(mul_scheme="rapid10", div_scheme="rapid9",
+                            backends=backends)
+        return layers.decode_attention(q, k_cache, v_cache, sp, 50, 0, acfg)
+
+    ref = run("jnp")
+    got = run("pallas-interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+    with capture_pallas_calls() as calls:
+        run("pallas-interpret")
+    names = [(c.kernel_name, c.kernel_file) for c in calls]
+    assert len(calls) == 1 and "_flash_kernel" in calls[0].kernel_name, (
+        f"expected exactly the fused flash call, saw {names}")

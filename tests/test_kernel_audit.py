@@ -33,8 +33,11 @@ def rules_of(findings):
 # --------------------------------------------------------------------------
 
 def test_capture_records_geometry():
-    """The shim records grid / BlockSpecs / dimension_semantics from an
-    unmodified wrapper call, with no TPU and no compilation."""
+    """The shim records grid / BlockSpecs / dimension_semantics /
+    memory spaces / scratch from an unmodified wrapper call, with no
+    TPU and no compilation.  The default dispatch is the pipelined
+    formulation: a (mi, ni) grid with x / w in ANY memory, the K scan
+    and its depth-deep VMEM scratch inside the kernel."""
     from repro.kernels.log_matmul.ops import log_matmul
 
     x = jnp.ones((8, 16), jnp.float32)
@@ -43,15 +46,42 @@ def test_capture_records_geometry():
         out = log_matmul(x, w, "rapid10", interpret=False)
     assert len(calls) == 1
     c = calls[0]
-    assert len(c.grid) == 3                      # (mi, ni, kk)
-    assert c.dimension_semantics is not None
-    assert c.dimension_semantics[:2] == ("parallel", "parallel")
+    assert len(c.grid) == 2                      # (mi, ni): kk is in-kernel
+    assert c.kernel_kwargs.get("depth") == budget.PIPELINE_BUFFERS
+    assert c.dimension_semantics == ("parallel", "parallel")
     assert len(c.in_specs) >= 3                  # x, w, lut
     assert len(c.out_specs) == 1
+    assert c.in_specs[0].memory_space == "any"   # x: manual DMA
+    assert c.in_specs[1].memory_space == "any"   # w: manual DMA
+    assert c.out_specs[0].memory_space is None   # out: grid-staged VMEM
     blk = c.in_specs[0].block()
-    assert blk[-1] % budget.LANE == 0
+    assert blk[-1] % budget.LANE == 0            # padded K rides the lanes
+    # x / w scratch rotations + one DMA semaphore pair, all depth-deep
+    arrays = [s for s in c.scratch_shapes if s["dtype"] != "dma_sem"]
+    sems = [s for s in c.scratch_shapes if s["dtype"] == "dma_sem"]
+    assert len(arrays) == 2 and len(sems) == 2
+    assert all(s["shape"][0] == budget.PIPELINE_BUFFERS
+               for s in c.scratch_shapes)
     # the fake returns zeros of the declared out shape
     assert out.shape == (8, 8) and not np.asarray(out).any()
+
+
+def test_capture_depth1_takes_grid_formulation():
+    """depth=1 routes to the legacy (mi, ni, kk) grid kernel — the
+    KernelSpec depth knob selects the formulation, not just a size."""
+    from repro.kernels.log_matmul.ops import log_matmul
+    from repro.kernels.spec import KernelSpec, PipelineSpec
+
+    x = jnp.ones((8, 16), jnp.float32)
+    w = jnp.ones((16, 8), jnp.float32)
+    with capture_pallas_calls() as calls:
+        log_matmul(x, w, "rapid10", interpret=False,
+                   spec=KernelSpec(pipeline=PipelineSpec(depth=1)))
+    (c,) = calls
+    assert len(c.grid) == 3                      # (mi, ni, kk)
+    assert c.dimension_semantics[:2] == ("parallel", "parallel")
+    assert not c.scratch_shapes
+    assert all(s.memory_space is None for s in c.in_specs)
 
 
 def test_capture_does_not_pollute_jit_cache(rng):
@@ -250,13 +280,33 @@ def test_full_kernel_audit_is_clean():
     assert all(r["double_buffer_safe"] for r in reports)
     families = {r["family"] for r in reports}
     assert {"log_matmul", "fused_softmax", "fused_rms", "fused_div_eltwise",
-            "fused_div_rowbcast", "rapid_mul", "rapid_div"} <= families
-    # the deep-K class is the one place the race checker is live
-    deep = [r for r in reports if r["variant"].startswith(
-        "log_matmul/deepk2048")]
+            "fused_div_rowbcast", "flash_attn", "rapid_mul",
+            "rapid_div"} <= families
+    # the pinned depth-1 deep-K class is the one place the race checker
+    # is live (pipelined variants fold the K scan inside the kernel)
+    deep = [r for r in reports
+            if r["variant"].startswith("log_matmul/deepk2048/plain")]
     assert deep and all(
         r["write_discipline"] == "accumulate+first/last-guard"
         and r["output_revisit_dims"]["out0"] for r in deep)
+
+
+def test_pipelined_variants_fit_budget_at_pipeline_depth():
+    """Every manual-pipeline variant audits within VMEM_BUDGET_BYTES at
+    PIPELINE_BUFFERS depth (or deeper), scratch included — the RPD005
+    guarantee the KernelSpec depth knob must not break."""
+    _, reports = run_kernel_audit()
+    piped = [r for r in reports if r["pipeline_depth"] >= 2]
+    assert piped, "no pipelined variants in the sweep"
+    deep_enough = [r for r in piped
+                   if r["pipeline_depth"] >= budget.PIPELINE_BUFFERS]
+    assert deep_enough
+    for r in piped:
+        assert r["scratch_bytes"] > 0, r["variant"]
+        assert r["working_set_bytes"] <= r["vmem_budget_bytes"], r["variant"]
+        anys = [o for o in r["operands"] if o["memory_space"] == "any"]
+        assert anys, r["variant"]
+        assert all(o["vmem_bytes"] == 0 for o in anys), r["variant"]
 
 
 def test_registry_coverage_complete():

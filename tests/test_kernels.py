@@ -22,6 +22,7 @@ from repro.core.mitchell import mitchell_div_np, mitchell_mul_np
 from repro.core import float_approx as fa
 from repro.kernels.log_matmul.ops import log_matmul
 from repro.kernels.log_matmul.ref import log_matmul_ref
+from repro.kernels.spec import KernelSpec, PipelineSpec
 from repro.kernels.rapid_div.ops import rapid_div
 from repro.kernels.rapid_div.ref import rapid_div_ref
 from repro.kernels.rapid_mul.ops import rapid_mul
@@ -67,7 +68,7 @@ def test_log_matmul_kernel_vs_oracle(shape, scheme, rng):
     x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
     lut = jnp.asarray(fa.mul_lut(scheme))
-    got = log_matmul(x, w, scheme, blocks=(8, 128, 128))
+    got = log_matmul(x, w, scheme, spec=KernelSpec(bm=8, bn=128, bk=128))
     want = log_matmul_ref(x, w, lut)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-5, atol=3e-5)
@@ -99,13 +100,14 @@ def test_log_matmul_degenerate_shapes_bitexact(shape, rng):
 
 
 def test_log_matmul_explicit_blocks_exceed_problem(rng):
-    """Explicit ``blocks=`` with bm/bn/bk larger than the problem dims
+    """Explicit block fields with bm/bn/bk larger than the problem dims
     (bm > M): the pad-to-block-grid path must stay bit-exact."""
     from repro.core.ops import qmatmul
 
     x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
-    got = log_matmul(x, w, "rapid10", blocks=(256, 256, 512),
+    got = log_matmul(x, w, "rapid10",
+                     spec=KernelSpec(bm=256, bn=256, bk=512),
                      interpret=True)
     want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
     assert got.shape == (4, 8)
@@ -114,14 +116,48 @@ def test_log_matmul_explicit_blocks_exceed_problem(rng):
 
 
 def test_log_matmul_explicit_blocks_over_budget():
-    """An oversized explicit ``blocks=`` fails at call time against the
+    """An oversized explicit block choice fails at call time against the
     same VMEM constant the static auditor (RPD005) ratchets on, instead
     of dying on-device."""
     x = jnp.zeros((8, 128), jnp.float32)
     w = jnp.zeros((128, 128), jnp.float32)
     with pytest.raises(ValueError, match="VMEM budget"):
-        log_matmul(x, w, "rapid10", blocks=(2048, 4096, 512),
+        log_matmul(x, w, "rapid10", spec=KernelSpec(bm=2048, bn=4096, bk=512),
                    interpret=True)
+
+
+def test_log_matmul_blocks_tuple_shim_warns(rng):
+    """One-release compatibility: positional ``blocks=`` tuples still
+    work, converted to a KernelSpec with a DeprecationWarning."""
+    from repro.core.ops import qmatmul
+
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="blocks="):
+        got = log_matmul(x, w, "rapid10", blocks=(8, 128, 128),
+                         interpret=True)
+    want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
+    with pytest.raises(ValueError, match="not both"):
+        log_matmul(x, w, "rapid10", blocks=(8, 128, 128),
+                   spec=KernelSpec(bm=8), interpret=True)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_log_matmul_depth_knob_bitexact(depth, rng):
+    """The KernelSpec pipeline-depth knob changes the schedule, never
+    the numbers: every depth agrees bit-for-bit with the chunk=1 jnp
+    scan on a single-K-block problem."""
+    from repro.core.ops import qmatmul
+
+    x = jnp.asarray(rng.normal(size=(24, 136)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(136, 40)), jnp.float32)
+    got = log_matmul(x, w, "rapid10", interpret=True,
+                     spec=KernelSpec(pipeline=PipelineSpec(depth=depth)))
+    want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
 
 
 def test_pick_blocks_norm_epilogue_rebalance_fits_budget():

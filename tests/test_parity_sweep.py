@@ -128,3 +128,76 @@ def test_parity_marker_registered(pytestconfig):
     """The sweep must stay selectable as its own CI job (`-m parity`)."""
     markers = pytestconfig.getini("markers")
     assert any(str(m).startswith("parity") for m in markers)
+
+
+# --------------------------------------------------------------------------
+# pipeline-depth axis: the KernelSpec depth knob is schedule-only.
+# Depth 1 is the grid formulation, depth >= 2 the manual async-copy
+# pipeline; both must agree bit-for-bit with the jnp oracle.
+# --------------------------------------------------------------------------
+
+DEPTHS = (1, 2, 3)
+
+
+def _depth_spec(depth):
+    from repro.kernels.spec import KernelSpec, PipelineSpec
+
+    return KernelSpec(pipeline=PipelineSpec(depth=depth))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_pipeline_depth_matmul_bitexact(scheme, shape, depth, rng):
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    x, w, _, _ = _operands(shape, rng)
+    oracle = jax.jit(functools.partial(
+        qmatmul, scheme=scheme, chunk=1, backend="jnp"))(x, w)
+    got = log_matmul(x, w, scheme, interpret=True, spec=_depth_spec(depth))
+    _assert_bitexact(oracle, got)
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+def test_pipeline_depth_full_tail_bitexact(shape, depth, rng):
+    """Depth axis composed with the heaviest epilogue (bias + silu +
+    residual + rms keep_prenorm): the epilogue runs once per output
+    tile after the K scan in both formulations."""
+    from repro.kernels.log_matmul.ops import log_matmul
+
+    x, w, b, r = _operands(shape, rng)
+    ep = be.Epilogue(activation="silu", norm="rms", div_scheme="rapid9",
+                     keep_prenorm=True)
+    oracle = jax.jit(functools.partial(
+        qmatmul, scheme="rapid10", chunk=1, backend="jnp", bias=b,
+        residual=r, epilogue=ep))(x, w)
+    got = log_matmul(x, w, "rapid10", bias=b, residual=r, epilogue=ep,
+                     interpret=True, spec=_depth_spec(depth))
+    _assert_bitexact(oracle, got)
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("rows,cols", [(5, 40), (64, 1000), (128, 4096)])
+@pytest.mark.parametrize("family", ["softmax", "rms", "rowbcast"])
+def test_pipeline_depth_fused_div_bitexact(family, rows, cols, depth, rng):
+    e = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    spec = _depth_spec(depth)
+    if family == "softmax":
+        from repro.kernels.fused_div.ops import fused_softmax_div
+
+        oracle = be.softmax_div(e, "rapid9", backend="jnp")
+        got = fused_softmax_div(e, "rapid9", spec=spec, interpret=True)
+    elif family == "rms":
+        from repro.kernels.fused_div.ops import fused_rms_div
+
+        oracle = be.rms_div(e, 1e-6, "rapid9", backend="jnp")
+        got = fused_rms_div(e, 1e-6, "rapid9", spec=spec, interpret=True)
+    else:
+        from repro.kernels.fused_div.ops import fused_elementwise_div
+
+        d = jnp.asarray(rng.normal(size=(rows, 1)) + 4.0, jnp.float32)
+        oracle = be.div(e, d, "rapid9", backend="jnp")
+        got = fused_elementwise_div(e, d, "rapid9", spec=spec,
+                                    interpret=True)
+    _assert_bitexact(oracle, got)
