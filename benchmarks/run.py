@@ -33,6 +33,14 @@ gated run *auto-records* the ones that passed into the baseline
 artifact — same mode only (smoke vs full) — so the module that skipped
 the gate once is gated from its second run onward instead of silently
 forever.
+
+Tuning: ``--retune`` re-runs the KernelSpec autotuner
+(``repro.kernels.autotune.retune``) for the host platform *before* the
+benchmarks, rewriting ``--tune-baseline`` (default
+``TUNE_baseline.json``); the benchmarks then run against the fresh
+winners.  Off-TPU the tuner's objective is a deterministic static cost
+model, so a CI ``--retune`` reproduces the committed file byte-for-byte
+— the bench-gate job diff-checks it for uncommitted drift.
 """
 from __future__ import annotations
 
@@ -94,11 +102,34 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=4.0,
                     help="allowed wall-time ratio vs baseline (default 4.0; "
                          "generous on purpose — CI runners are noisy)")
+    ap.add_argument("--retune", action="store_true",
+                    help="re-run the KernelSpec autotuner for the host "
+                         "platform before benchmarking (rewrites "
+                         "--tune-baseline; see repro.kernels.autotune)")
+    ap.add_argument("--tune-baseline", default="TUNE_baseline.json",
+                    metavar="PATH",
+                    help="tuning-cache file --retune rewrites (default "
+                         "TUNE_baseline.json at the cwd/repo root)")
     args = ap.parse_args(argv)
     unknown = [n for n in args.names if n not in ALL]
     if unknown:
         ap.error(f"unknown benchmarks {unknown}; have {ALL}")
     names = args.names or ALL
+
+    if args.retune:
+        import os
+
+        from repro.kernels import autotune
+        print("===== retune =====")
+        # point this process's spec resolution at the retuned file, so
+        # the benchmarks below run against the fresh winners even when
+        # --tune-baseline is a scratch copy (the CI drift check)
+        os.environ[autotune.ENV_VAR] = str(args.tune_baseline)
+        summary = autotune.retune(path=args.tune_baseline)
+        print(f"===== retune done: {len(summary['entries'])} "
+              f"{summary['platform']} entries "
+              f"({summary['objective']}) =====")
+
     failures = []
     results = {}
     for name in names:

@@ -71,7 +71,7 @@ def run(n: int = 1 << 20, seed: int = 0, mm_shape=(256, 512, 256)):
 def main(smoke: bool = False):
     print("name,us_per_call,derived")
     # smoke: tiny elementwise arrays + a deliberately degenerate matmul
-    # (K=130 is the shape class _pick_blocks used to mis-tile)
+    # (K=130 is the shape class the block heuristics used to mis-tile)
     rows = run(n=1 << 12, mm_shape=(24, 130, 12)) if smoke else run()
     for name, us in rows:
         print(f"{name},{us:.1f},cpu-proxy")

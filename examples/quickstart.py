@@ -13,10 +13,12 @@ https://github.com/<org>/<repo>/actions/workflows/ci.yml/badge.svg
   parity       jnp oracle vs pallas-interpret bit-exactness sweep
   multidevice  EP/TP shard_map tests on 8 fake XLA devices, both jax
                pins — the kernels really run on local shards
-  bench-gate   benchmarks.run --smoke + regression diff against the
-               committed BENCH_baseline.json (JSON uploaded as a PR
-               artifact); serve_load additionally asserts continuous
-               batching beats fixed-slot tokens/s at equal KV memory
+  bench-gate   benchmarks.run --retune --smoke + regression diff
+               against the committed BENCH_baseline.json, and a drift
+               check that the retune reproduced TUNE_baseline.json
+               byte-for-byte (JSON uploaded as a PR artifact);
+               serve_load additionally asserts continuous batching
+               beats fixed-slot tokens/s at equal KV memory
 """
 import jax
 import jax.numpy as jnp
@@ -81,9 +83,16 @@ print("fused block tail:", tail.shape, "residual stream:", res_stream.shape)
 # --- KernelSpec: one spec object, and the pipeline-depth knob -----------
 # Every Pallas kernel family (log_matmul, the fused_div variants,
 # rapid_mul / rapid_div elementwise, flash-decode attention) accepts the
-# same spec object instead of per-family positional tuples (the old
-# `blocks=(bm, bn, bk)` still works for one release, with a
-# DeprecationWarning):
+# same spec object instead of per-family positional tuples.
+#
+# Migration notes (removed APIs):
+#   * `log_matmul(..., blocks=(bm, bn, bk))` and tuple specs are gone —
+#     passing `blocks=` raises TypeError; write
+#     `spec=KernelSpec(bm=..., bn=..., bk=...)` instead.
+#   * The deprecated `ApproxConfig.backend` / `.matmul_backend` read
+#     aliases are gone — reads raise AttributeError; use
+#     `cfg.backend_for(site)` (lint rule RPD009 hard-errors on any
+#     source site, and is not baselineable).
 from repro.kernels.log_matmul.ops import log_matmul
 from repro.kernels.spec import KernelSpec, PipelineSpec
 
@@ -102,6 +111,38 @@ print("\ndepth 1 vs depth 2 bit-identical:", bool((y1 == y2).all()))
 # benchmarks/roofline.py times the depth-1 vs depth-2 schedules and the
 # fused flash-attention kernel vs the separate-passes path on a shared
 # arithmetic-intensity axis.
+
+# --- autotuning kernel specs --------------------------------------------
+# Fields you leave as None are filled by resolve_spec (kernels/spec.py),
+# the single choke point every wrapper and core/backend.py dispatcher
+# goes through.  Per-field precedence:
+#
+#   explicit KernelSpec field  >  tuning-cache hit  >  heuristic
+#
+# The tuning cache is TUNE_baseline.json at the repo root (override with
+# $RAPID_TUNE_CACHE): committed, versioned winners produced by the
+# autotuner in repro.kernels.autotune, which times every budget-legal
+# (bm, bn, bk, depth) candidate per kernel family on the actual device
+# — real wall time on TPU, a deterministic static cost model elsewhere,
+# so CI can regenerate the file byte-for-byte.  Entries are keyed by
+# (family, bucketed shape class, scheme, epilogue kind, platform), so
+# nearby dispatch shapes that tile identically share a winner.  Every
+# knob the tuner searches is schedule-only: a cached spec stays
+# bit-exact against the jnp oracle (tests/test_autotune.py proves it
+# for every committed entry).
+#
+#   PYTHONPATH=src python -m benchmarks.run --retune   # re-search + save
+#   PYTHONPATH=src python -m repro.kernels.autotune --list  # inspect
+#
+# Pin a spec manually when you want to override the cache at one call
+# site — an explicit field always wins:
+from repro.kernels.spec import resolve_spec
+
+auto = resolve_spec("log_matmul", (512, 512, 512), scheme="rapid10")
+pinned = resolve_spec("log_matmul", (512, 512, 512),
+                      KernelSpec(bm=64), scheme="rapid10")
+print("tuned 512^3 spec:", (auto.bm, auto.bn, auto.bk, auto.depth),
+      "| pinned bm wins:", pinned.bm)
 
 # --- running sharded with the pallas backend ----------------------------
 # The pallas kernels are *per-device*, so on a multi-device process the
@@ -200,7 +241,8 @@ print("decode compiled", eng.trace_counts["decode"], "time(s); pages free:",
 #
 #   RPD005  per-grid-step VMEM working set (double-buffered) vs the
 #           explicit budget in repro.kernels.budget — the same
-#           constants _pick_blocks derives block sizes from
+#           constants resolve_spec's heuristics derive block sizes
+#           from (and the autotuner's candidate filter enforces)
 #   RPD006  lane (%128) / sublane (%8) alignment, blocks divide the
 #           padded dims
 #   RPD007  index maps surjective onto the block grid (a non-surjective

@@ -76,7 +76,13 @@ def run_combined(entries: Optional[List[str]] = None,
 
     result = None
     if baseline:
-        result = F.compare(current, F.load_baseline(baseline))
+        # hard-error rules (rules.HARD_ERROR_RULES, e.g. RPD009) are
+        # non-baselineable: committed allowlist entries for them are
+        # dropped before the ratchet so any occurrence is always new
+        from repro.analysis import rules
+        allowed = [f for f in F.load_baseline(baseline)
+                   if f.rule not in rules.HARD_ERROR_RULES]
+        result = F.compare(current, allowed)
         for f in result.new:
             print(f"NEW: {f.where()}: [{f.rule}] {f.msg}")
             if f.code:

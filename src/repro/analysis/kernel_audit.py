@@ -13,8 +13,9 @@ is checked per shape class:
   RPD005  VMEM working set: per-grid-step tile bytes (grid-varying
           operands counted ``PIPELINE_BUFFERS`` times, grid-invariant
           LUT constants once) against the explicit per-platform budget
-          in :mod:`repro.kernels.budget` — the same constants
-          ``_pick_blocks`` / ``_pick_bm`` derive block sizes from.
+          in :mod:`repro.kernels.budget` — the same constants the
+          ``kernels/spec.py::resolve_spec`` heuristics derive block
+          sizes from and the autotuner's legality filter enforces.
   RPD006  tiling legality: block lane dim %128 (or == the array dim),
           sublane dim %8, and blocks dividing the padded array dims so
           no implicit tail padding sneaks in.
@@ -593,6 +594,12 @@ def iter_variants() -> List[Tuple[str, str, Callable[[], None]]]:
         ("rapid_mul/flat1000_16bit", "rapid_mul", drive_rapid_mul),
         ("rapid_div/flat513_8bit", "rapid_div", drive_rapid_div),
     ]
+
+    # every committed tuning-cache winner (TUNE_baseline.json) audits as
+    # its own tuned/<key> variant, so RPD005-008 gate the cache contents
+    # — a hand-edited or stale entry fails the audit job, not a TPU run
+    from repro.kernels.autotune import tuned_audit_variants
+    variants += tuned_audit_variants()
     return variants
 
 

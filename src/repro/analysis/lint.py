@@ -65,8 +65,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     found = run_lint(args.root)
     result: Optional[F.CompareResult] = None
     if args.baseline:
+        # hard-error rules are non-baselineable: drop any committed
+        # baseline entry for them so an occurrence always reads as new
         baseline = [f for f in F.load_baseline(args.baseline)
-                    if f.layer == "ast"]
+                    if f.layer == "ast"
+                    and f.rule not in rules.HARD_ERROR_RULES]
         result = F.compare(found, baseline)
         print_findings(result.new)
         for w in result.warnings:

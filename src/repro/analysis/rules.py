@@ -21,10 +21,12 @@ tradeoff.  These rules make that class of rot visible:
   RPD004  literal backend strings (``backend="pallas"`` etc.) at call
           sites instead of ``ApproxConfig.backend_for(site)`` — a
           hard-coded name bypasses per-site routing and env/CI pinning;
-  RPD009  reads of the deprecated ``ApproxConfig.backend`` /
-          ``.matmul_backend`` aliases — both collapse the per-site map
-          to its "default" entry and are removed next release (the
-          properties also raise ``DeprecationWarning`` at runtime).
+  RPD009  reads of the removed ``ApproxConfig.backend`` /
+          ``.matmul_backend`` aliases — both collapsed the per-site map
+          to its "default" entry; the properties are gone (a read now
+          raises ``AttributeError`` at runtime) and this rule is a
+          **hard error**: it cannot be baselined away
+          (``HARD_ERROR_RULES``), any occurrence fails the lint gate.
 
 Marker contract: ``# audit: exact — <reason>`` on the flagged line (or
 as a standalone comment on the line above) suppresses RPD rules for
@@ -48,6 +50,7 @@ from repro.analysis.findings import Finding
 __all__ = [
     "RULES",
     "KERNEL_RULES",
+    "HARD_ERROR_RULES",
     "MARKER_RE",
     "lint_source",
     "lint_file",
@@ -64,9 +67,16 @@ RULES = {
               "mitchell.lut_host/lut_device at trace-constant level)",
     "RPD004": "literal backend string at a call site (use "
               "ApproxConfig.backend_for(site))",
-    "RPD009": "deprecated ApproxConfig.backend / .matmul_backend alias "
-              "read (use backend_for(site); removed next release)",
+    "RPD009": "removed ApproxConfig.backend / .matmul_backend alias read "
+              "(use backend_for(site); hard error, not baselineable)",
 }
+
+# Rules whose findings can never be absorbed by AUDIT_baseline.json:
+# the ratchet drops any baseline entry for these before comparing, so
+# even a committed occurrence fails the gate.  RPD009 graduated here
+# when the runtime alias properties were deleted — a surviving read is
+# an AttributeError waiting to fire, not tech debt to burn down.
+HARD_ERROR_RULES = {"RPD009"}
 
 # Layer-3 kernel-geometry rules (RPD005+), checked by
 # ``repro.analysis.kernel_audit`` over captured ``pallas_call`` geometry
@@ -228,8 +238,8 @@ class _Visitor(ast.NodeVisitor):
                     node.attr == "backend" and base_leaf in _APPROX_BASES):
                 self._emit(
                     "RPD009", node,
-                    f"deprecated alias {base_leaf or '<expr>'}.{node.attr} "
-                    "collapses the per-site backend map (use "
+                    f"removed alias {base_leaf or '<expr>'}.{node.attr} "
+                    "raises AttributeError at runtime (use "
                     "backend_for('default') or a specific site)")
         self.generic_visit(node)
 

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -132,27 +131,10 @@ class ApproxConfig:
         merged.update(dict(backends))  # __post_init__ re-validates keys
         return dataclasses.replace(self, backends=merged)
 
-    @property
-    def backend(self) -> str:
-        """Deprecated read-only alias for the *default* site entry (the
-        whole map used to be this one field).  Read sites through
-        :meth:`backend_for`; construct/replace with ``backends=`` or
-        :meth:`with_backends`.  Slated for removal next release (lint
-        rule RPD009 flags call sites)."""
-        warnings.warn(
-            "ApproxConfig.backend is deprecated; use "
-            "backend_for('default') (reads) or backends=/with_backends() "
-            "(construction)", DeprecationWarning, stacklevel=2)
-        return self.backend_for("default")
-
-    @property
-    def matmul_backend(self) -> str:
-        """Deprecated alias from before the divider family shared the
-        pin; see :attr:`backend`.  Slated for removal next release."""
-        warnings.warn(
-            "ApproxConfig.matmul_backend is deprecated; use "
-            "backend_for('default')", DeprecationWarning, stacklevel=2)
-        return self.backend_for("default")
+    # The one-release ``.backend`` / ``.matmul_backend`` read-alias
+    # properties are gone: read sites through :meth:`backend_for`,
+    # construct/replace with ``backends=`` or :meth:`with_backends`.
+    # Lint rule RPD009 hard-errors on any remaining alias read.
 
 
 EXACT = ApproxConfig()

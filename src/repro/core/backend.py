@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.core import float_approx as fa
 from repro.kernels.fused_div import ref as fdref
+from repro.kernels.spec import as_kernel_spec, resolve_spec
 
 __all__ = [
     "Backend",
@@ -363,12 +364,21 @@ def _matmul_jnp(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
 def _matmul_pallas(x2, w2, scheme, *, chunk=64, bias=None, activation=None,
                    residual=None, epilogue: Optional[Epilogue] = None,
                    spec=None, interpret: Optional[bool] = None):
-    # chunk is a jnp-path tuning knob; the kernel has its own block sizes.
+    # chunk is a jnp-path tuning knob; the kernel has its own block
+    # sizes, pinned here at the dispatch layer through the resolve_spec
+    # choke point (explicit spec field > tuning cache > heuristic); the
+    # wrapper's own resolve is then an idempotent no-op.
     del chunk
     from repro.kernels.log_matmul.ops import log_matmul
 
+    ks = as_kernel_spec(spec)
+    ep = as_epilogue(epilogue if epilogue is not None else ks.epilogue,
+                     activation)
+    ks = resolve_spec("log_matmul", (x2.shape[0], w2.shape[1], x2.shape[1]),
+                      ks, scheme=scheme or ks.scheme or "rapid10",
+                      epilogue=ep)
     return log_matmul(x2, w2, scheme, bias=bias, activation=activation,
-                      residual=residual, epilogue=epilogue, spec=spec,
+                      residual=residual, epilogue=epilogue, spec=ks,
                       interpret=interpret)
 
 
@@ -413,12 +423,25 @@ def _div_pallas_interpret(a, b, scheme, *, spec=None):
     return _div_pallas(a, b, scheme, spec=spec, interpret=True)
 
 
+def _row_resolved(family, x, scheme, spec):
+    """Pin a fused-divider row spec at the dispatch layer (idempotent
+    with the wrapper's own resolve_spec pass)."""
+    ks = as_kernel_spec(spec)
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= int(d)
+    return resolve_spec(family, (rows, x.shape[-1]), ks,
+                        scheme=scheme or ks.scheme or "rapid9")
+
+
 def _softmax_div_pallas(e, scheme, *, floor=SOFTMAX_FLOOR, spec=None,
                         interpret: Optional[bool] = None):
     from repro.kernels.fused_div.ops import fused_softmax_div
 
-    return fused_softmax_div(e, scheme, floor=floor, spec=spec,
-                             interpret=interpret)
+    return fused_softmax_div(
+        e, scheme, floor=floor,
+        spec=_row_resolved("fused_softmax", e, scheme, spec),
+        interpret=interpret)
 
 
 def _softmax_div_pallas_interpret(e, scheme, *, floor=SOFTMAX_FLOOR,
@@ -431,7 +454,9 @@ def _rms_div_pallas(x, eps, scheme, *, spec=None,
                     interpret: Optional[bool] = None):
     from repro.kernels.fused_div.ops import fused_rms_div
 
-    return fused_rms_div(x, eps, scheme, spec=spec, interpret=interpret)
+    return fused_rms_div(x, eps, scheme,
+                         spec=_row_resolved("fused_rms", x, scheme, spec),
+                         interpret=interpret)
 
 
 def _rms_div_pallas_interpret(x, eps, scheme, *, spec=None):
@@ -461,8 +486,11 @@ def _decode_attn_pallas(qf, k_cache, v_cache, slot_positions, pos, window,
                         interpret: Optional[bool] = None):
     from repro.kernels.flash_attn.ops import flash_decode_attn
 
+    b, kv, g, hd = qf.shape
+    ks = resolve_spec("flash_attn", (b * kv, k_cache.shape[1], g, hd),
+                      as_kernel_spec(spec), scheme=scheme)
     return flash_decode_attn(qf, k_cache, v_cache, slot_positions, pos,
-                             window, scheme, floor=floor, spec=spec,
+                             window, scheme, floor=floor, spec=ks,
                              interpret=interpret)
 
 

@@ -3,8 +3,11 @@
 Every number the Pallas kernels' block-size heuristics rely on lives
 here, so the static kernel auditor (``repro.analysis.kernel_audit``)
 checks the *same* constants the kernels use instead of re-deriving
-"~1 MiB" comments.  ``log_matmul/ops.py::_pick_blocks`` and
-``fused_div/ops.py::_pick_bm`` import from this module; the auditor
+"~1 MiB" comments.  The heuristic fallbacks live in one place —
+``kernels/spec.py::resolve_spec`` (explicit spec field > tuning-cache
+winner > heuristic) — and import from this module, as does the
+autotuner's candidate legality filter (``kernels/autotune.py``); the
+auditor
 fails any captured ``pallas_call`` whose per-grid-step working set
 (double-buffered operand tiles + single-buffered LUT constants)
 exceeds :func:`vmem_budget`.
@@ -91,9 +94,10 @@ def vmem_budget(platform: str = "tpu") -> int:
 def check_working_set(working_set_bytes: int, platform: str = "tpu") -> None:
     """Raise if a kernel's per-grid-step working set blows the budget.
 
-    Called by the block-size heuristics on the final block choice, so an
-    oversized explicit ``blocks=`` override fails at call time with the
-    same constant the static auditor enforces.
+    Called by the family wrappers on the *resolved* block choice —
+    explicit spec field, tuning-cache winner, or heuristic alike — so an
+    oversized spec fails at call time with the same constant the static
+    auditor enforces.
     """
     budget = vmem_budget(platform)
     if working_set_bytes > budget:

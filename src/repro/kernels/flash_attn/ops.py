@@ -16,7 +16,7 @@ from repro.core import float_approx as fa
 from repro.kernels import budget
 from repro.kernels.flash_attn.flash_attn import flash_decode_pallas
 from repro.kernels.flash_attn.ref import SOFTMAX_FLOOR, canon_posq
-from repro.kernels.spec import KernelSpec, as_kernel_spec
+from repro.kernels.spec import KernelSpec, as_kernel_spec, resolve_spec
 
 __all__ = ["flash_decode_attn"]
 
@@ -52,8 +52,12 @@ def flash_decode_attn(
     slot_positions: [B, C] int32; ``pos`` scalar or [B] / [B, 1].
     ``scheme=None`` is the exact-divide combine (not defaulted from the
     spec: exact softmax is a semantic choice, not a tuning knob).
-    ``spec.bk`` overrides the cache chunk size (multiple of 128);
-    ``spec.pipeline.depth`` sets how many chunk fetches stay in flight.
+    ``spec.bk`` overrides the cache chunk size (multiple of 128); left
+    unset it resolves via :func:`repro.kernels.spec.resolve_spec` —
+    tuning-cache winner, else one lane tile.  ``spec.pipeline.depth``
+    sets how many chunk fetches stay in flight.  Depth is schedule-only
+    (bit-exact); the chunk size re-chunks the online softmax, keeping
+    this family's tight-allclose parity contract vs the reference.
     Returns [B, KV, G, hd] f32.
     """
     ks = as_kernel_spec(spec)
@@ -61,14 +65,15 @@ def flash_decode_attn(
         interpret = ks.interpret
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    bc = ks.bk or 128
+    b, kv, g, hd = qf.shape
+    c = k_cache.shape[1]
+    rows = b * kv
+    ks = resolve_spec("flash_attn", (rows, c, g, hd), ks, scheme=scheme)
+    bc = ks.bk
     if bc % budget.LANE:
         raise ValueError(f"cache chunk bc={bc} must be a multiple of "
                          f"{budget.LANE} (slot positions ride the lanes)")
     depth = ks.depth
-    b, kv, g, hd = qf.shape
-    c = k_cache.shape[1]
-    rows = b * kv
     gp = budget.round_up(g, budget.SUBLANE)
     hdp = budget.round_up(hd, budget.LANE)
     cpad = budget.round_up(c, bc)

@@ -8,11 +8,14 @@ rows cannot trap (0/floor = 0, sqrt(eps) > 0); everything padded is
 sliced off before return.
 
 Every wrapper accepts the shared :class:`repro.kernels.spec.KernelSpec`
-(``spec=``): ``bm`` overrides the slab-row heuristic and
-``spec.pipeline.depth`` selects the formulation — depth 1 the legacy
-grid loop, depth >= 2 (the default, ``budget.PIPELINE_BUFFERS``) the
-software-pipelined slab loop with explicit async-copy staging.  Both
-are bit-exact against each other and the jnp reference.
+(``spec=``); geometry left unset resolves through
+:func:`repro.kernels.spec.resolve_spec` — explicit ``bm``/depth >
+committed tuning-cache winner (``TUNE_baseline.json``) > the slab-row
+heuristic.  ``spec.pipeline.depth`` selects the formulation — depth 1
+the legacy grid loop, depth >= 2 (the default,
+``budget.PIPELINE_BUFFERS``) the software-pipelined slab loop with
+explicit async-copy staging.  Both are bit-exact against each other and
+the jnp reference.
 """
 from __future__ import annotations
 
@@ -28,20 +31,9 @@ from repro.kernels.fused_div.fused_div import (
     rms_div_pallas,
     softmax_div_pallas,
 )
-from repro.kernels.spec import KernelSpec, as_kernel_spec
+from repro.kernels.spec import KernelSpec, as_kernel_spec, resolve_spec
 
 __all__ = ["fused_softmax_div", "fused_rms_div", "fused_elementwise_div"]
-
-
-def _pick_bm(m: int, npad: int, depth: int = 1) -> int:
-    """Rows per slab: >= the f32 sublane tile, capped so the in/out
-    slabs stay under ``budget.ROW_SLAB_BYTES`` each — the same constants
-    the static kernel auditor (RPD005) enforces."""
-    rows = budget.round_up(m, budget.SUBLANE)
-    bm = max(budget.SUBLANE,
-             min(budget.MAX_BM, budget.slab_rows(npad), rows))
-    _check_budget(bm, npad, depth)
-    return bm
 
 
 def _check_budget(bm: int, npad: int, depth: int) -> None:
@@ -62,20 +54,22 @@ def _resolve(spec, interpret):
     return ks, interpret
 
 
-def _as_rows(x: jnp.ndarray, ks: KernelSpec):
-    """[..., n] -> padded [M_pad, n_pad] f32 + the unpad geometry."""
+def _as_rows(x: jnp.ndarray, ks: KernelSpec, family: str,
+             scheme: str | None):
+    """[..., n] -> padded [M_pad, n_pad] f32 + the resolved spec and
+    unpad geometry.  ``family`` keys the resolve_spec tuning-cache
+    lookup (explicit ``bm``/depth > cache > slab-row heuristic); the
+    budget check applies to the winner regardless of source."""
     lead, n = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, n).astype(jnp.float32)
     m = x2.shape[0]
     npad = ref.padded_width(n)
-    if ks.bm is not None:
-        bm = ks.bm
-        _check_budget(bm, npad, ks.depth)
-    else:
-        bm = _pick_bm(m, npad, ks.depth)
+    ks = resolve_spec(family, (m, n), ks, scheme=scheme)
+    bm = ks.bm
+    _check_budget(bm, npad, ks.depth)
     mp = -(-m // bm) * bm
     xp = jnp.pad(x2, ((0, mp - m), (0, npad - n)))
-    return xp, bm, m, n, lead
+    return xp, ks, m, n, lead
 
 
 def fused_softmax_div(e: jnp.ndarray, scheme: str | None = None, *,
@@ -86,8 +80,8 @@ def fused_softmax_div(e: jnp.ndarray, scheme: str | None = None, *,
     ks, interpret = _resolve(spec, interpret)
     scheme = scheme or ks.scheme or "rapid9"
     lut = fa.div_lut_device(scheme)
-    ep, bm, m, n, lead = _as_rows(e, ks)
-    out = softmax_div_pallas(ep, lut, floor=float(floor), bm=bm,
+    ep, ks, m, n, lead = _as_rows(e, ks, "fused_softmax", scheme)
+    out = softmax_div_pallas(ep, lut, floor=float(floor), bm=ks.bm,
                              depth=ks.depth, interpret=interpret)
     return out[:m, :n].reshape(*lead, n).astype(e.dtype)
 
@@ -99,8 +93,8 @@ def fused_rms_div(x: jnp.ndarray, eps: float, scheme: str | None = None, *,
     ks, interpret = _resolve(spec, interpret)
     scheme = scheme or ks.scheme or "rapid9"
     lut = fa.div_lut_device(scheme)
-    xp, bm, m, n, lead = _as_rows(x, ks)
-    out = rms_div_pallas(xp, lut, n=n, eps=float(eps), bm=bm,
+    xp, ks, m, n, lead = _as_rows(x, ks, "fused_rms", scheme)
+    out = rms_div_pallas(xp, lut, n=n, eps=float(eps), bm=ks.bm,
                          depth=ks.depth, interpret=interpret)
     return out[:m, :n].reshape(*lead, n).astype(x.dtype)
 
@@ -129,13 +123,13 @@ def fused_elementwise_div(a: jnp.ndarray, b: jnp.ndarray,
     rowbcast = (out_shape == a.shape and a.ndim >= 1
                 and (b.ndim == 0 or b.shape[-1] == 1))
     if rowbcast:
-        ap, bm, m, n, lead = _as_rows(a, ks)
+        ap, ks, m, n, lead = _as_rows(a, ks, "fused_div_rowbcast", scheme)
         # [M_pad, 1] column: the denominator's row count lives on the
         # sublane axis where bm-alignment holds (see _div_rowbcast_kernel)
         bv = jnp.broadcast_to(b, (*a.shape[:-1], 1)).reshape(-1, 1)
         bv = jnp.pad(bv.astype(jnp.float32), ((0, ap.shape[0] - m), (0, 0)),
                      constant_values=1.0)
-        out = div_rowbcast_pallas(ap, bv, lut, bm=bm, depth=ks.depth,
+        out = div_rowbcast_pallas(ap, bv, lut, bm=ks.bm, depth=ks.depth,
                                   interpret=interpret)
         return out[:m, :n].reshape(*lead, n).astype(orig)
     a, b = jnp.broadcast_arrays(a, b)

@@ -7,34 +7,13 @@ import jax.numpy as jnp
 from repro.core import float_approx as fa
 from repro.core.backend import Epilogue, as_epilogue
 from repro.kernels import budget
-from repro.kernels.fused_div import ref as fdref
 from repro.kernels.log_matmul.log_matmul import (
     log_matmul_pallas,
     log_matmul_pipelined,
 )
-from repro.kernels.spec import KernelSpec, as_kernel_spec
+from repro.kernels.spec import KernelSpec, as_kernel_spec, resolve_spec
 
 __all__ = ["log_matmul"]
-
-
-def _pick_blocks(m: int, n: int, k: int):
-    """Choose hardware-aligned block sizes that fit the VMEM budget.
-
-    Every block is clamped to the problem size *rounded up to the
-    minimum tile* (``budget.SUBLANE`` x ``budget.LANE`` for f32):
-    degenerate dims smaller than a tile used to leak through as
-    unaligned block shapes, and a K dim between 128 and 512 that was
-    not a multiple of the unroll factor silently dropped its tail
-    elements (``bk // unroll`` truncated — the smoke-mode shapes
-    exposed this).  Keeping bk a multiple of 128 keeps it a multiple of
-    any unroll <= 8.  All caps come from :mod:`repro.kernels.budget` —
-    the same constants the static kernel auditor (RPD005/RPD006)
-    enforces over the captured BlockSpecs.
-    """
-    bm = min(budget.MAX_BM, budget.round_up(m, budget.SUBLANE))
-    bn = min(budget.MAX_BN, budget.round_up(n, budget.LANE))
-    bk = min(budget.MAX_BK, budget.round_up(k, budget.LANE))
-    return bm, bn, bk
 
 
 def _check_budget(bm: int, bn: int, bk: int, ep: Epilogue,
@@ -84,18 +63,24 @@ def log_matmul(
     epilogues force whole lane-padded rows per output tile so the
     canonical padded-row denominator semantics hold.
 
-    ``spec`` (:class:`repro.kernels.spec.KernelSpec`) carries block
-    sizes, pipeline depth, scheme/epilogue defaults and interpret mode
-    uniformly across the kernel families; explicit keyword arguments
-    override its fields.  Depth >= 2 (the default,
-    ``budget.PIPELINE_BUFFERS``) dispatches to the software-pipelined
-    kernel whose next K-block DMA overlaps the current block's compute;
-    depth 1 keeps the legacy grid formulation.  Both are bit-exact
-    against each other and the chunk=1 jnp scan.  ``blocks=`` tuples
-    are deprecated (converted with a warning).  Returns the tail, or
-    ``(tail, pre_norm)`` when ``epilogue.keep_prenorm``.
+    Geometry left unset on ``spec`` is resolved through
+    :func:`repro.kernels.spec.resolve_spec` — explicit field > committed
+    tuning-cache winner (``TUNE_baseline.json``) > budget heuristic —
+    and norm epilogues force whole-row output tiles regardless of
+    source.  ``spec`` also carries scheme/epilogue defaults and
+    interpret mode; explicit keyword arguments override its fields.
+    Depth >= 2 (the default, ``budget.PIPELINE_BUFFERS``) dispatches to
+    the software-pipelined kernel whose next K-block DMA overlaps the
+    current block's compute; depth 1 keeps the legacy grid formulation.
+    Both are bit-exact against each other and the chunk=1 jnp scan.
+    Returns the tail, or ``(tail, pre_norm)`` when
+    ``epilogue.keep_prenorm``.
     """
-    ks = as_kernel_spec(spec, blocks=blocks)
+    if blocks is not None:
+        raise TypeError(
+            "log_matmul(blocks=...) was removed; pass "
+            "spec=KernelSpec(bm=..., bn=..., bk=...) instead")
+    ks = as_kernel_spec(spec)
     scheme = scheme or ks.scheme or "rapid10"
     if epilogue is None:
         epilogue = ks.epilogue
@@ -107,15 +92,9 @@ def log_matmul(
     lut = fa.mul_lut_device(scheme)
     m, k = x.shape
     _, n = w.shape
-    bm, bn, bk = ks.blocks_or(*_pick_blocks(m, n, k))
-    if ep.norm is not None:
-        # whole lane-padded rows per output tile (canonical denominator
-        # semantics); rebalance bm/bk so the VMEM working set stays
-        # bounded when N is a real model width — <= ROW_SLAB_BYTES per
-        # bm-row slab (out / pre / residual), <= W_SLAB_BYTES for w
-        bn = fdref.padded_width(n)
-        bm = max(budget.SUBLANE, min(bm, budget.slab_rows(bn)))
-        bk = max(budget.LANE, min(bk, budget.slab_depth(bn)))
+    ks = resolve_spec("log_matmul", (m, n, k), ks, scheme=scheme,
+                      epilogue=ep)
+    bm, bn, bk = ks.bm, ks.bn, ks.bk
     depth = ks.depth
     _check_budget(bm, bn, bk, ep, bias is not None, residual is not None,
                   depth=depth)

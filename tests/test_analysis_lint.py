@@ -169,6 +169,40 @@ def test_rpd009_deprecated_alias_reads():
     assert rules_of(got) == ["RPD009"]
 
 
+def test_rpd009_is_hard_error_not_baselineable(tmp_path):
+    """An RPD009 finding fails the lint gate even when a committed
+    baseline allowlists it: hard-error rules are dropped from the
+    baseline before the ratchet, so the occurrence always reads as
+    new."""
+    from repro.analysis import lint
+    from repro.analysis.rules import HARD_ERROR_RULES
+
+    assert "RPD009" in HARD_ERROR_RULES
+
+    root = tmp_path / "repro"
+    (root / "models").mkdir(parents=True)
+    bad = root / "models" / "m.py"
+    bad.write_text("def f(acfg):\n    return acfg.backend\n")
+
+    found = lint.run_lint(root)
+    assert rules_of(found) == ["RPD009"]
+
+    # bake the finding into a baseline, then prove the ratchet still
+    # fails — a baselineable rule (e.g. RPD002) would pass here
+    baseline = tmp_path / "base.json"
+    F.dump_report(str(baseline), found, [])
+    rc = lint.main(["--root", str(root), "--baseline", str(baseline)])
+    assert rc == 1
+
+    # control: the same flow with a baselineable rule is allowlisted
+    bad.write_text("def f(a, b):\n    return a / b\n")
+    found = lint.run_lint(root)
+    assert rules_of(found) == ["RPD002"]
+    F.dump_report(str(baseline), found, [])
+    assert lint.main(["--root", str(root),
+                      "--baseline", str(baseline)]) == 0
+
+
 def test_rpd009_ignores_unrelated_backend_attrs():
     # engine/args objects carry .backend too; only ApproxConfig-shaped
     # base names are the deprecated alias

@@ -1,0 +1,332 @@
+"""KernelSpec autotuner: cache document contract, key stability,
+resolve_spec precedence (explicit > cache > heuristic), and parity —
+every committed TUNE_baseline.json winner produces the same numerics as
+the heuristic fallback (block sizes and pipeline depth are
+schedule-only knobs for every family except flash-attn's cache-chunk
+size, which keeps the tight-allclose contract instead).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.autotune import (
+    CACHE_VERSION,
+    TuningCache,
+    entry_key,
+    shape_class,
+)
+from repro.kernels.spec import KernelSpec, PipelineSpec, resolve_spec
+
+
+@pytest.fixture(autouse=True)
+def _isolate_cache(monkeypatch):
+    """Every test picks its own active cache; nothing leaks between
+    tests or into the committed repo-root default."""
+    yield
+    autotune.set_tuning_cache(None)
+
+
+def committed_cache():
+    return TuningCache.load(autotune.default_cache_path())
+
+
+# --------------------------------------------------------------------------
+# cache document: roundtrip + validation
+# --------------------------------------------------------------------------
+
+def _entry(family="fused_softmax", shapes=(8, 128), scheme="rapid9",
+           epilogue_kind="plain", bm=8, bn=None, bk=None, depth=1):
+    return {"family": family, "shapes": list(shapes), "scheme": scheme,
+            "epilogue_kind": epilogue_kind, "bm": bm, "bn": bn, "bk": bk,
+            "depth": depth, "cost_us": 1.0, "objective": "static-model"}
+
+
+def test_cache_roundtrip(tmp_path):
+    cache = TuningCache.empty()
+    key = entry_key("fused_softmax", (8, 128), "rapid9", "plain")
+    cache.set_platform("cpu", {key: _entry()}, objective="static-model")
+    p = tmp_path / "TUNE.json"
+    cache.save(p)
+    back = TuningCache.load(p)
+    assert back.doc == cache.doc
+    assert back.platforms() == ("cpu",)
+    assert back.lookup("cpu", key)["bm"] == 8
+    assert back.lookup("tpu", key) is None
+
+
+def test_missing_cache_is_empty(tmp_path):
+    cache = TuningCache.load(tmp_path / "nope.json")
+    assert cache.platforms() == ()
+
+
+def test_corrupt_cache_not_json(tmp_path):
+    p = tmp_path / "TUNE.json"
+    p.write_text("{not json")
+    with pytest.raises(ValueError, match="corrupt tuning cache"):
+        TuningCache.load(p)
+
+
+def test_corrupt_cache_missing_platforms(tmp_path):
+    p = tmp_path / "TUNE.json"
+    p.write_text(json.dumps({"version": CACHE_VERSION}))
+    with pytest.raises(ValueError, match="corrupt tuning cache"):
+        TuningCache.load(p)
+
+
+def test_stale_cache_version_mismatch(tmp_path):
+    p = tmp_path / "TUNE.json"
+    p.write_text(json.dumps({"version": CACHE_VERSION + 1,
+                             "platforms": {}}))
+    with pytest.raises(ValueError, match="stale tuning cache.*--retune"):
+        TuningCache.load(p)
+
+
+def test_corrupt_cache_entry_schema(tmp_path):
+    p = tmp_path / "TUNE.json"
+    bad = _entry()
+    del bad["depth"]
+    doc = {"version": CACHE_VERSION,
+           "platforms": {"cpu": {"objective": "static-model",
+                                 "entries": {"k": bad}}}}
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="missing fields.*depth"):
+        TuningCache.load(p)
+    bad = _entry(bm="eight")
+    doc["platforms"]["cpu"]["entries"] = {"k": bad}
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="not an int"):
+        TuningCache.load(p)
+
+
+def test_corrupt_active_cache_raises_on_dispatch(tmp_path, monkeypatch):
+    """A corrupt committed cache fails loudly on the first dispatch that
+    consults it — not silently falling back to heuristics."""
+    p = tmp_path / "TUNE.json"
+    p.write_text("[]")
+    monkeypatch.setenv(autotune.ENV_VAR, str(p))
+    autotune.set_tuning_cache(None)  # force a reload from the env path
+    with pytest.raises(ValueError, match="corrupt tuning cache"):
+        resolve_spec("fused_softmax", (8, 128), scheme="rapid9")
+
+
+def test_env_var_overrides_cache_path(tmp_path, monkeypatch):
+    p = tmp_path / "elsewhere.json"
+    monkeypatch.setenv(autotune.ENV_VAR, str(p))
+    assert autotune.default_cache_path() == p
+    monkeypatch.delenv(autotune.ENV_VAR)
+    assert autotune.default_cache_path().name == autotune.CACHE_BASENAME
+
+
+# --------------------------------------------------------------------------
+# key stability: pure-python bucketing, identical across jax pins
+# --------------------------------------------------------------------------
+
+def test_shape_class_literals():
+    assert shape_class("log_matmul", (512, 512, 512)) == "512x512x512"
+    # dims round up to the min tile, then to the next power of two
+    assert shape_class("log_matmul", (256, 256, 130)) == "256x256x256"
+    assert shape_class("log_matmul", (4, 512, 512)) == "8x512x512"
+    assert shape_class("fused_softmax", (64, 1000)) == "64x1024"
+    assert shape_class("fused_rms", (32, 300)) == "32x512"
+    assert shape_class("flash_attn", (8, 256, 4, 64)) == "r8c256g8d128"
+    with pytest.raises(KeyError):
+        shape_class("not_a_family", (1, 2))
+
+
+def test_entry_key_literals():
+    assert entry_key("fused_softmax", (8, 128), "rapid9", "plain") \
+        == "fused_softmax/8x128/rapid9/plain"
+    assert entry_key("log_matmul", (512, 512, 512), "rapid10", "rms+pre") \
+        == "log_matmul/512x512x512/rapid10/rms+pre"
+    # scheme=None is the exact arm
+    assert entry_key("flash_attn", (2, 128, 8, 128), None, "plain") \
+        == "flash_attn/r8c128g8d128/exact/plain"
+
+
+def test_nearby_shapes_share_a_class():
+    """The whole point of bucketing: dispatch shapes that tile the same
+    way hit the same winner."""
+    assert shape_class("fused_softmax", (60, 1000)) \
+        == shape_class("fused_softmax", (64, 1024))
+    assert shape_class("log_matmul", (500, 510, 512)) \
+        == shape_class("log_matmul", (512, 512, 512))
+
+
+# --------------------------------------------------------------------------
+# resolve_spec precedence: explicit > cache > heuristic
+# --------------------------------------------------------------------------
+
+def test_cache_hit_beats_heuristic():
+    autotune.set_tuning_cache(committed_cache())
+    ks = resolve_spec("fused_softmax", (8, 128), scheme="rapid9",
+                      platform="cpu")
+    # committed winner: bm=8 depth=1; the heuristic default depth is 2
+    assert (ks.bm, ks.depth) == (8, 1)
+
+
+def test_explicit_spec_beats_cache():
+    autotune.set_tuning_cache(committed_cache())
+    explicit = KernelSpec(bm=64, pipeline=PipelineSpec(depth=3))
+    ks = resolve_spec("fused_softmax", (8, 128), explicit, scheme="rapid9",
+                      platform="cpu")
+    assert (ks.bm, ks.depth) == (64, 3)
+    # per-field: an explicit depth still takes the cached bm
+    ks = resolve_spec("fused_softmax", (8, 128),
+                      KernelSpec(pipeline=PipelineSpec(depth=3)),
+                      scheme="rapid9", platform="cpu")
+    assert (ks.bm, ks.depth) == (8, 3)
+
+
+def test_empty_cache_heuristic_fallback():
+    """Off-TPU / cache-miss: resolution falls through to the
+    budget-derived heuristics (the former _pick_blocks/_pick_bm)."""
+    autotune.set_tuning_cache(TuningCache.empty())
+    ks = resolve_spec("fused_softmax", (8, 128), scheme="rapid9")
+    from repro.kernels import budget
+    assert (ks.bm, ks.depth) == (8, budget.PIPELINE_BUFFERS)
+    ks = resolve_spec("log_matmul", (512, 512, 512), scheme="rapid10")
+    assert (ks.bm, ks.bn, ks.bk) == (256, 256, 512)
+
+
+def test_unknown_platform_is_a_clean_miss():
+    autotune.set_tuning_cache(committed_cache())
+    ks = resolve_spec("fused_softmax", (8, 128), scheme="rapid9",
+                      platform="gpu")
+    from repro.kernels import budget
+    assert ks.depth == budget.PIPELINE_BUFFERS  # heuristic, not bm=8/d=1
+
+
+def test_resolve_is_idempotent_under_cache():
+    autotune.set_tuning_cache(committed_cache())
+    once = resolve_spec("log_matmul", (512, 512, 512), scheme="rapid10",
+                        platform="cpu")
+    again = resolve_spec("log_matmul", (512, 512, 512), once,
+                         scheme="rapid10", platform="cpu")
+    assert once == again
+
+
+# --------------------------------------------------------------------------
+# committed-cache contents: coverage + parity vs the heuristic specs
+# --------------------------------------------------------------------------
+
+def test_committed_cache_covers_every_workload():
+    """TUNE_baseline.json carries a winner for every tuned family x
+    bench shape class, on every committed platform."""
+    cache = committed_cache()
+    assert set(cache.platforms()) >= {"cpu", "tpu"}
+    want = {w.key for w in autotune.workloads()}
+    families = {w.family for w in autotune.workloads()}
+    assert families == {"log_matmul", "fused_softmax", "fused_rms",
+                        "fused_div_rowbcast", "flash_attn"}
+    for platform in cache.platforms():
+        assert set(cache.entries(platform)) == want
+
+
+def test_committed_entries_pass_the_legality_filter():
+    """Every committed winner must itself be a legal candidate — the
+    same budget + RPD005-008 geometry gate the tuner searched under."""
+    cache = committed_cache()
+    by_key = {w.key: w for w in autotune.workloads()}
+    for key, entry in cache.entries("cpu").items():
+        w = by_key[key]
+        spec = autotune.entry_spec(entry)
+        assert autotune._geometry_legal(w, spec), (key, entry)
+
+
+@pytest.mark.parity
+def test_committed_entries_match_heuristic_numerics():
+    """Parity: for every committed winner whose resolved geometry
+    differs from the heuristic fallback, driving the family wrapper
+    with the tuned cache active is bit-identical to driving it with an
+    empty cache — except flash-attn when the cache-chunk size changes
+    the online-softmax chunking, which keeps tight allclose instead."""
+    cache = committed_cache()
+    by_key = {w.key: w for w in autotune.workloads()}
+    checked = 0
+    for key, entry in sorted(cache.entries("cpu").items()):
+        w = by_key[key]
+        autotune.set_tuning_cache(TuningCache.empty())
+        heur = resolve_spec(w.family, w.shapes, scheme=w.scheme,
+                            epilogue=w.epilogue())
+        tuned = autotune.entry_spec(entry)
+        autotune.set_tuning_cache(cache)
+        got = resolve_spec(w.family, w.shapes, scheme=w.scheme,
+                           epilogue=w.epilogue(), platform="cpu")
+        # the dispatch choke point really serves the committed winner
+        for f in ("bm", "bn", "bk"):
+            tv = getattr(tuned, f)
+            if tv is not None:
+                assert getattr(got, f) == tv, (key, f)
+        assert got.depth == tuned.depth, key
+        if (heur.bm, heur.bn, heur.bk, heur.depth) \
+                == (got.bm, got.bn, got.bk, got.depth):
+            continue  # winner == heuristic: trivially identical
+        out_tuned = np.asarray(w.drive(KernelSpec(), interpret=True))
+        autotune.set_tuning_cache(TuningCache.empty())
+        out_heur = np.asarray(w.drive(KernelSpec(), interpret=True))
+        if w.family == "flash_attn" and got.bk != heur.bk:
+            np.testing.assert_allclose(out_tuned, out_heur,
+                                       rtol=2e-6, atol=2e-6)
+        else:
+            assert out_tuned.tobytes() == out_heur.tobytes(), key
+        checked += 1
+    # the committed file must actually exercise the non-trivial path
+    assert checked >= 3
+
+
+def test_tuned_audit_variants_cover_the_cache():
+    """The kernel auditor re-audits every committed winner as its own
+    variant, so RPD005-008 gate the cache contents in CI."""
+    cache = committed_cache()
+    variants = autotune.tuned_audit_variants()
+    ids = {vid for vid, _, _ in variants}
+    for platform in cache.platforms():
+        for key in cache.entries(platform):
+            assert any(vid == f"tuned/{key}"
+                       or vid.startswith(f"tuned/{key}@")
+                       for vid in ids), key
+
+
+# --------------------------------------------------------------------------
+# search strategy + retune plumbing
+# --------------------------------------------------------------------------
+
+def test_exhaustive_search_is_deterministic_argmin():
+    s = autotune.ExhaustiveSearch()
+    cands = [KernelSpec(bm=8), KernelSpec(bm=64), KernelSpec(bm=128)]
+    costs = {8: 3.0, 64: 1.0, 128: 1.0}
+    best, cost, n = s.search(cands, lambda c: costs[c.bm])
+    assert (best.bm, cost, n) == (64, 1.0, 3)  # first-wins tie break
+    assert s.name == "exhaustive"
+
+
+def test_legal_candidates_are_deduped_and_nonempty():
+    w = [x for x in autotune.workloads()
+         if x.family == "fused_softmax" and x.shapes == (8, 128)][0]
+    cands = autotune.legal_candidates(w)
+    assert cands
+    seen = {(c.bm, c.bn, c.bk, c.depth) for c in cands}
+    assert len(seen) == len(cands)
+
+
+def test_retune_preserves_other_platform_subtrees(tmp_path, monkeypatch):
+    """A retune replaces only the platform it scored; foreign platforms'
+    committed winners survive byte-for-byte."""
+    p = tmp_path / "TUNE.json"
+    cache = TuningCache.empty()
+    key = entry_key("fused_softmax", (8, 128), "rapid9", "plain")
+    foreign = {key: _entry(bm=64, depth=3)}
+    cache.set_platform("tpu", foreign, objective="wall-time")
+    cache.save(p)
+    # shrink the sweep to one cheap workload so the test stays fast
+    only = [w for w in autotune.workloads()
+            if w.family == "fused_softmax" and w.shapes == (8, 128)]
+    monkeypatch.setattr(autotune, "workloads", lambda: only)
+    summary = autotune.retune("cpu", path=p, verbose=False)
+    back = TuningCache.load(p)
+    assert back.entries("tpu") == foreign
+    assert set(back.entries("cpu")) == {key}
+    assert summary["platform"] == "cpu"
+    assert back.entries("cpu")[key]["objective"] == "static-model"

@@ -390,7 +390,8 @@ DIV_SWEEP_SHAPES = [
     (4, 128),      # lane-aligned width
     (2, 5, 200),   # batch dims + cross-lane-boundary width
     (16, 1000),    # wide unaligned rows
-    (300, 4096),   # _pick_bm caps bm=64 -> 5 grid steps + row padding:
+    (300, 4096),   # the row heuristic caps bm=64 -> 5 grid steps + row
+                   # padding:
                    # the kernel tile [bm, n_pad] genuinely differs from
                    # the oracle's [M, n_pad] reduction operand here
 ]
@@ -545,23 +546,20 @@ def test_per_site_backend_overrides(monkeypatch):
 
 
 def test_backend_alias_and_site_map():
-    """`backend`/`matmul_backend` survive one more release as read-only
-    aliases for the default entry, but warn on every read (lint rule
-    RPD009 flags source sites); with_backends merges; unknown sites
-    raise."""
+    """The deprecated `backend`/`matmul_backend` read aliases are gone:
+    any read raises AttributeError (lint rule RPD009 hard-errors on
+    source sites); with_backends merges; unknown sites raise."""
     from repro.configs.base import ApproxConfig
 
     acfg = ApproxConfig(backends="jnp")
-    with pytest.warns(DeprecationWarning, match="ApproxConfig.backend "):
-        assert acfg.backend == "jnp"
-    with pytest.warns(DeprecationWarning, match="matmul_backend"):
-        assert acfg.matmul_backend == "jnp"
+    with pytest.raises(AttributeError):
+        acfg.backend  # noqa: B018 — removed alias must not resolve
+    with pytest.raises(AttributeError):
+        acfg.matmul_backend  # noqa: B018
     assert acfg.backend_for("mlp") == "jnp"  # defers to default
     merged = acfg.with_backends({"mlp": "pallas-interpret"})
     assert merged.backend_for("mlp") == "pallas-interpret"
     assert merged.backend_for("norm") == "jnp"  # default preserved
-    with pytest.warns(DeprecationWarning):
-        assert merged.backend == "jnp"
     # an explicit per-site "auto" defers to the default entry, exactly
     # like an absent entry (it must NOT leapfrog straight to env/hw)
     explicit_auto = ApproxConfig(backends={"mlp": "auto", "default": "jnp"})
@@ -569,8 +567,8 @@ def test_backend_alias_and_site_map():
     reset = merged.with_backends("pallas-interpret")
     assert reset.backend_for("mlp") == "pallas-interpret"
     assert reset.backend_for("logits") == "pallas-interpret"
-    with pytest.raises(AttributeError):  # FrozenInstanceError
-        acfg.backend = "pallas"  # read-only alias
+    with pytest.raises((AttributeError, TypeError)):
+        acfg.backend = "pallas"  # frozen dataclass, and no alias slot
     with pytest.raises(KeyError):
         ApproxConfig(backends={"not_a_site": "jnp"})
     with pytest.raises(KeyError):

@@ -126,22 +126,17 @@ def test_log_matmul_explicit_blocks_over_budget():
                    interpret=True)
 
 
-def test_log_matmul_blocks_tuple_shim_warns(rng):
-    """One-release compatibility: positional ``blocks=`` tuples still
-    work, converted to a KernelSpec with a DeprecationWarning."""
-    from repro.core.ops import qmatmul
+def test_log_matmul_blocks_tuple_removed(rng):
+    """The one-release ``blocks=`` tuple shim is gone: passing it (or a
+    tuple as ``spec=``) raises TypeError naming the replacement."""
+    from repro.kernels.spec import as_kernel_spec
 
     x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="blocks="):
-        got = log_matmul(x, w, "rapid10", blocks=(8, 128, 128),
-                         interpret=True)
-    want = qmatmul(x, w, "rapid10", chunk=1, backend="jnp")
-    np.testing.assert_array_equal(
-        np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
-    with pytest.raises(ValueError, match="not both"):
-        log_matmul(x, w, "rapid10", blocks=(8, 128, 128),
-                   spec=KernelSpec(bm=8), interpret=True)
+    with pytest.raises(TypeError, match=r"spec=KernelSpec\(bm="):
+        log_matmul(x, w, "rapid10", blocks=(8, 128, 128), interpret=True)
+    with pytest.raises(TypeError, match=r"spec=KernelSpec\(bm="):
+        as_kernel_spec((8, 128, 128))
 
 
 @pytest.mark.parametrize("depth", [1, 2, 3])
@@ -164,19 +159,16 @@ def test_pick_blocks_norm_epilogue_rebalance_fits_budget():
     """Norm epilogues force whole padded rows per tile; the rebalanced
     bm/bk must keep the working set inside the auditor's budget even at
     real model widths."""
-    from repro.kernels import budget as B
-    from repro.kernels.log_matmul.ops import _check_budget, _pick_blocks
+    from repro.kernels.log_matmul.ops import _check_budget
+    from repro.kernels.spec import (_default_matmul_blocks,
+                                    _rebalance_norm_matmul)
     from repro.core.backend import Epilogue
-    from repro.kernels.fused_div import ref as fdref
 
     ep = Epilogue(norm="rms", div_scheme="rapid9")
 
     def rebalanced(m, n, k):
-        bm, bn, bk = _pick_blocks(m, n, k)
-        bn = fdref.padded_width(n)
-        bm = max(B.SUBLANE, min(bm, B.slab_rows(bn)))
-        bk = max(B.LANE, min(bk, B.slab_depth(bn)))
-        return bm, bn, bk
+        bm, bn, bk = _default_matmul_blocks(m, n, k)
+        return _rebalance_norm_matmul(bm, bn, bk, n)
 
     for m, n, k in [(8, 4096, 512), (256, 8192, 1024), (1, 3000, 128)]:
         _check_budget(*rebalanced(m, n, k), ep, False, False)  # no raise
@@ -190,10 +182,10 @@ def test_pick_blocks_norm_epilogue_rebalance_fits_budget():
 def test_pick_blocks_hardware_aligned():
     """Blocks are multiples of the f32 tile (8 sublanes / 128 lanes) and
     bk stays a multiple of the unroll factor for every K."""
-    from repro.kernels.log_matmul.ops import _pick_blocks
+    from repro.kernels.spec import _default_matmul_blocks
 
     for m, n, k in [(1, 1, 1), (5, 7, 130), (300, 9, 136), (999, 999, 999)]:
-        bm, bn, bk = _pick_blocks(m, n, k)
+        bm, bn, bk = _default_matmul_blocks(m, n, k)
         assert bm % 8 == 0 and 8 <= bm <= 256
         assert bn % 128 == 0 and 128 <= bn <= 256
         assert bk % 128 == 0 and 128 <= bk <= 512

@@ -132,7 +132,7 @@ def test_moe_fsdp_token_gather_matches_oracle_to_f32_tolerance(monkeypatch):
     (32, 96, 40),    # unaligned everything
 ])
 def test_tp_matmul_under_shard_map_bitexact(m, n, k):
-    """Plain TP: rows sharded on data, columns on model — _pick_blocks
+    """Plain TP: rows sharded on data, columns on model — resolve_spec
     sees the *per-shard* shapes inside the body and the fused epilogue
     stays intact per shard."""
     from jax.sharding import PartitionSpec
